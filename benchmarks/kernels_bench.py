@@ -1,0 +1,107 @@
+"""Kernel micro-benchmarks: fused Pallas (interpret) path vs pure-jnp
+oracle, per-call microseconds.  On CPU the interpret path is SLOWER (it
+executes the kernel body in Python) — the number that matters here is the
+oracle column (the XLA-fused baseline the TPU kernel must beat) plus the
+allclose check; wall-time wins are TPU-only.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_call(fn: Callable, *args, iters: int = 20) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def rows():
+    rng = np.random.default_rng(0)
+    out = []
+
+    from repro.kernels.pixcon.ops import pixcon_gate
+    from repro.kernels.pixcon.ref import pixcon_gate_ref
+    B, T, P, F, H = 32, 30, 64, 4, 32
+    a = (jnp.asarray(rng.normal(0, 1, (B, T, P)).astype("float32")),
+         jnp.asarray(rng.normal(0, 1, (B, P, F)).astype("float32")),
+         jnp.asarray(rng.normal(0, .5, (F, H)).astype("float32")),
+         jnp.zeros(H), jnp.asarray(rng.normal(0, .5, H).astype("float32")),
+         jnp.zeros(()))
+    ref = jax.jit(pixcon_gate_ref)
+    err = float(jnp.max(jnp.abs(pixcon_gate(*a) - ref(*a))))
+    out.append(("pixcon_pallas_interp", time_call(pixcon_gate, *a),
+                f"allclose_err={err:.1e}"))
+    out.append(("pixcon_jnp_oracle", time_call(ref, *a), "xla_fused_baseline"))
+
+    from repro.kernels.conv1d.ops import causal_conv1d
+    from repro.kernels.conv1d.ref import causal_conv1d_ref
+    a = (jnp.asarray(rng.normal(0, 1, (8, 512, 256)).astype("float32")),
+         jnp.asarray(rng.normal(0, .5, (4, 256)).astype("float32")),
+         jnp.zeros(256))
+    f1 = lambda *x: causal_conv1d(*x, activation="silu")
+    f2 = jax.jit(lambda *x: causal_conv1d_ref(*x, activation="silu"))
+    err = float(jnp.max(jnp.abs(f1(*a) - f2(*a))))
+    out.append(("conv1d_pallas_interp", time_call(f1, *a),
+                f"allclose_err={err:.1e}"))
+    out.append(("conv1d_jnp_oracle", time_call(f2, *a), "xla_fused_baseline"))
+
+    from repro.kernels.lstm_cell.ops import lstm_cell_fused
+    from repro.kernels.lstm_cell.ref import lstm_cell_ref
+    B, D, H = 64, 128, 256
+    a = (jnp.asarray(rng.normal(0, 1, (B, D)).astype("float32")),
+         jnp.asarray(rng.normal(0, 1, (B, H)).astype("float32")),
+         jnp.asarray(rng.normal(0, 1, (B, H)).astype("float32")),
+         jnp.asarray(rng.normal(0, .2, (D, 4, H)).astype("float32")),
+         jnp.asarray(rng.normal(0, .2, (H, 4, H)).astype("float32")),
+         jnp.zeros((4, H)))
+    ref = jax.jit(lstm_cell_ref)
+    err = float(max(jnp.max(jnp.abs(x - y))
+                    for x, y in zip(lstm_cell_fused(*a), ref(*a))))
+    out.append(("lstm_cell_pallas_interp", time_call(lstm_cell_fused, *a),
+                f"allclose_err={err:.1e}"))
+    out.append(("lstm_cell_jnp_oracle", time_call(ref, *a),
+                "xla_fused_baseline"))
+
+    from repro.kernels.ssd_chunk.ops import ssd_chunk_fused
+    from repro.kernels.ssd_chunk.ref import ssd_chunk_ref
+    Bsz, nc, Q, H, N, P = 2, 4, 64, 4, 32, 16
+    Cc = jnp.asarray(rng.normal(0, 1, (Bsz, nc, Q, H, N)).astype("float32"))
+    Bc = jnp.asarray(rng.normal(0, 1, (Bsz, nc, Q, H, N)).astype("float32"))
+    xdt = jnp.asarray(rng.normal(0, 1, (Bsz, nc, Q, H, P)).astype("float32"))
+    dA = jnp.asarray(np.cumsum(-rng.uniform(0.01, 0.3, (Bsz, nc, H, Q)), -1)
+                     .astype("float32"))
+    to_k = lambda t: t.transpose(0, 1, 3, 2, 4).reshape(Bsz * nc, H, Q, -1)
+    ref_fn = jax.jit(lambda c, b, x, d: ssd_chunk_ref(
+        to_k(c), to_k(b), to_k(x), d.reshape(Bsz * nc, H, Q)))
+    y1, s1 = ssd_chunk_fused(Cc, Bc, xdt, dA)
+    y2, s2 = ref_fn(Cc, Bc, xdt, dA)
+    err = float(jnp.max(jnp.abs(
+        y1.transpose(0, 1, 3, 2, 4).reshape(Bsz * nc, H, Q, P) - y2)))
+    out.append(("ssd_chunk_pallas_interp",
+                time_call(ssd_chunk_fused, Cc, Bc, xdt, dA),
+                f"allclose_err={err:.1e}"))
+    out.append(("ssd_chunk_jnp_oracle", time_call(ref_fn, Cc, Bc, xdt, dA),
+                "xla_fused_baseline"))
+
+    from repro.kernels.local_attn.ops import local_attention_fused
+    from repro.kernels.local_attn.ref import local_attention_ref
+    q = jnp.asarray(rng.normal(0, 1, (2, 256, 4, 64)).astype("float32"))
+    k = jnp.asarray(rng.normal(0, 1, (2, 256, 2, 64)).astype("float32"))
+    v = jnp.asarray(rng.normal(0, 1, (2, 256, 2, 64)).astype("float32"))
+    f1 = lambda *x: local_attention_fused(*x, window=64, block_q=64)
+    f2 = jax.jit(lambda *x: local_attention_ref(*x, window=64))
+    err = float(jnp.max(jnp.abs(f1(q, k, v) - f2(q, k, v))))
+    out.append(("local_attn_pallas_interp", time_call(f1, q, k, v),
+                f"allclose_err={err:.1e}"))
+    out.append(("local_attn_jnp_oracle", time_call(f2, q, k, v),
+                "xla_fused_baseline"))
+    return out

@@ -1,0 +1,176 @@
+"""Roofline derivation (deliverable g): reads results/dryrun/*.json and
+computes the three roofline terms per (arch x shape x mesh):
+
+  compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+cost_analysis numbers are PER DEVICE (post-GSPMD SPMD module), so
+HLO_FLOPs = flops_per_device * chips; same for bytes/collectives — the
+chips factor cancels and each term reduces to per-device / per-chip-rate.
+Also reports MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+from repro.configs import INPUT_SHAPES, get_config
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+ICI_BW = 50e9            # B/s / link
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def count_params(cfg) -> Dict[str, float]:
+    """Analytic parameter counts (total and active-per-token)."""
+    d, L = cfg.d_model, cfg.num_layers
+    dh = cfg.resolved_head_dim()
+    emb = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    total = emb
+    active = emb
+    for kind in cfg.layer_kinds():
+        layer = 0.0
+        if kind in ("global", "local"):
+            layer += d * dh * (cfg.num_heads * 2 + cfg.num_kv_heads * 2)
+        elif kind == "recurrent":
+            w = cfg.rglru.lru_width or d
+            layer += 2 * d * w + 2 * w * w + w * d
+        elif kind == "ssm":
+            s = cfg.ssm
+            di = s.d_inner(d)
+            layer += 2 * d * di + 2 * d * s.ngroups * s.state_dim \
+                + d * s.num_heads(d) + di * d
+        total += layer
+        active += layer
+    # FFN
+    n_moe = 0 if cfg.moe is None else cfg.num_layers - cfg.first_k_dense
+    n_dense = sum(1 for k in cfg.layer_kinds() if k != "ssm") - n_moe
+    if cfg.d_ff:
+        total += n_dense * 3 * d * cfg.d_ff
+        active += n_dense * 3 * d * cfg.d_ff
+    if cfg.moe is not None:
+        m = cfg.moe
+        total += n_moe * (3 * d * m.d_ff_expert * m.num_experts
+                          + d * m.num_experts)
+        active += n_moe * 3 * d * m.d_ff_expert * m.top_k
+        if m.num_shared:
+            sh = 3 * d * (m.d_ff_shared or m.d_ff_expert * m.num_shared)
+            total += n_moe * sh
+            active += n_moe * sh
+    return {"total": total, "active": active}
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*D tokens (train) or 2*N_active*D (fwd-only)."""
+    n = count_params(cfg)["active"]
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def analyze(rec: dict) -> Optional[dict]:
+    if "error" in rec.get("cost", {}):
+        return None
+    cfg = get_config(rec["arch"])
+    shape = INPUT_SHAPES[rec["shape"]]
+    chips = rec["devices"]
+    fl_dev = rec["cost"].get("flops", 0.0)
+    by_dev = rec["cost"].get("bytes accessed", 0.0)
+    coll_dev = rec["collectives"]["total_bytes"]
+    t_comp = fl_dev / PEAK_FLOPS
+    t_mem = by_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    mf_dev = mf / chips
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "step": rec["step_kind"], "chips": chips,
+        "tag": rec.get("tag", ""), "opts": rec.get("opts", {}),
+        "flops_dev": fl_dev, "bytes_dev": by_dev, "coll_dev": coll_dev,
+        **{k: round(v * 1e3, 4) for k, v in
+           (("compute_ms", t_comp), ("memory_ms", t_mem),
+            ("collective_ms", t_coll))},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops_dev": mf_dev,
+        "useful_ratio": round(mf_dev / fl_dev, 3) if fl_dev else None,
+        "hbm_gb": (rec.get("memory", {}).get("temp_size_in_bytes", 0)
+                   + rec.get("memory", {}).get("argument_size_in_bytes", 0))
+        / 1e9,
+        "hbm_fit": rec.get("memory", {}).get("temp_size_in_bytes", 0)
+        + rec.get("memory", {}).get("argument_size_in_bytes", 0) < 16e9,
+        "collective_counts": rec["collectives"]["counts"],
+    }
+
+
+def load_all(dry_dir: str = DRYRUN_DIR):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dry_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = analyze(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def markdown_table(rows, mesh: str = "pod") -> str:
+    """§Roofline table (single-pod per the assignment)."""
+    hdr = ("| arch | shape | step | compute ms | memory ms | coll ms | "
+           "dominant | useful | fits |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh or r.get("tag"):
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['step']} "
+            f"| {r['compute_ms']:.2f} | {r['memory_ms']:.2f} "
+            f"| {r['collective_ms']:.2f} | **{r['dominant']}** "
+            f"| {r['useful_ratio']} | {'y' if r['hbm_fit'] else 'NO'} |")
+    return "\n".join(lines)
+
+
+def perf_table(rows) -> str:
+    """§Perf: tagged (optimized) runs vs their baselines."""
+    base = {(r["arch"], r["shape"], r["mesh"]): r
+            for r in rows if not r.get("tag")}
+    lines = ["| arch | shape | tag | coll ms (base->opt) | memory ms | "
+             "temp+args GB | fits |", "|" + "---|" * 7]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["tag"])):
+        if not r.get("tag") or r["mesh"] != "pod":
+            continue
+        b = base.get((r["arch"], r["shape"], r["mesh"]))
+        if not b:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['tag']} "
+            f"| {b['collective_ms']:.0f} -> {r['collective_ms']:.0f} "
+            f"| {b['memory_ms']:.0f} -> {r['memory_ms']:.0f} "
+            f"| {b['hbm_gb']:.1f} -> {r['hbm_gb']:.1f} "
+            f"| {'y' if r['hbm_fit'] else 'NO'} |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = load_all()
+    print(markdown_table(rows))
+    print()
+    print(perf_table(rows))
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline.json", "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"\n{len(rows)} combos analyzed -> results/roofline.json")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * fig3_*    — paper Fig. 3 (NSE: Singlehead / Singlehead(+P) / Dom-ST)
+  * table1_*  — paper Table 1 (sequential vs IP-D wall time + speedup)
+  * kernel_*  — Pallas kernel micro-benches vs jnp oracle
+  * roofline_* — summary of the dry-run roofline terms (if results exist)
+
+Full-scale (23-watershed) variants: ``python -m benchmarks.fig3_nse --full``
+and ``python -m benchmarks.table1_pipeline --full`` (used for
+EXPERIMENTS.md §Paper).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def bench_fig3() -> None:
+    from benchmarks import fig3_nse
+    res = fig3_nse.run(num_watersheds=4, days=220, iters=100)
+    per_ws_us = res["wall_s"] / (res["num_watersheds"] * 3) * 1e6
+    m = res["mean_nse"]
+    emit("fig3_singlehead", per_ws_us, f"mean_nse={m['Singlehead']:.3f}")
+    emit("fig3_singlehead_p", per_ws_us,
+         f"mean_nse={m['Singlehead(+P)']:.3f};"
+         f"pct_improved={res['pct_improved_by_P']:.0f}%")
+    emit("fig3_domst", per_ws_us,
+         f"mean_nse={m['Distributed-Multihead(+P)']:.3f};"
+         f"beats_singlehead={res['pct_domst_beats_singlehead']:.0f}%")
+
+
+def bench_table1() -> None:
+    from benchmarks import table1_pipeline
+    res = table1_pipeline.run(num_watersheds=6, days=220, epochs=1)
+    for label, key in (("table1_singlehead_p", "Singlehead(+P)"),
+                       ("table1_multihead_p", "Distributed-Multihead(+P)")):
+        r = res[key]
+        emit(label, r["time_IPD_s"] * 1e6,
+             f"S={r['time_S_s']}s;IPD={r['time_IPD_s']}s;"
+             f"speedup={r['speedup']}x")
+
+
+def bench_kernels() -> None:
+    from benchmarks import kernels_bench
+    for name, us, derived in kernels_bench.rows():
+        emit(f"kernel_{name}", us, derived)
+
+
+def bench_roofline() -> None:
+    from benchmarks import roofline
+    rows = roofline.load_all()
+    if not rows:
+        emit("roofline_dryrun", 0.0, "no results/dryrun yet")
+        return
+    pod = [r for r in rows if r["mesh"] == "pod"]
+    for r in pod:
+        t = max(r["compute_ms"], r["memory_ms"], r["collective_ms"])
+        emit(f"roofline_{r['arch']}_{r['shape']}", t * 1e3,
+             f"dominant={r['dominant']};useful={r['useful_ratio']};"
+             f"fits={'y' if r['hbm_fit'] else 'n'}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_kernels()
+    bench_fig3()
+    bench_table1()
+    bench_roofline()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Batched serving demo: prefill + KV-cache decode over a request queue,
+on a reduced config of each decodable family (dense / MoE / SSM / hybrid /
+VLM).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import serve
+
+
+class Args:
+    smoke = True
+    requests = 6
+    batch_size = 3
+    prompt_len = 16
+    gen = 12
+    seed = 0
+
+
+def main():
+    for arch in ("qwen2-1.5b", "deepseek-moe-16b", "mamba2-130m",
+                 "recurrentgemma-2b", "gemma2-2b"):
+        a = Args()
+        a.arch = arch
+        print(f"--- {arch} (reduced config) ---")
+        serve(a)
+
+
+if __name__ == "__main__":
+    main()

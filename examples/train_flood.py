@@ -1,0 +1,78 @@
+"""End-to-end driver (paper's kind): distributed multi-watershed flood
+training — all 23 watershed replicas trained via the IP-D pipeline
+(watershed axis == mesh data axis on TPU; vectorized on CPU), a few
+hundred steps, NSE per watershed + ablation vs the Singlehead baseline.
+
+    PYTHONPATH=src python examples/train_flood.py [--watersheds 23]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import TrainConfig, get_config
+from repro.core import domst
+from repro.data import generate_all_watersheds, make_training_windows
+from repro.data.pipeline import InputPipeline, train_test_split
+from repro.optim import make_optimizer
+
+
+def train_stacked(cfg_name, windows, ip, epochs):
+    cfg = get_config(cfg_name)
+    tc = TrainConfig(learning_rate=3e-3, total_steps=epochs * 60,
+                     warmup_steps=20)
+    params = domst.init_stacked(cfg, jax.random.key(0), len(windows))
+    opt = jax.vmap(make_optimizer(tc)[0])(params)
+    step = domst.make_stacked_train_step(cfg, tc)
+    steps = 0
+    for epoch in range(epochs):
+        for b in ip.stacked_batches(epoch):
+            b = {k: jnp.asarray(v) for k, v in b.items()}
+            params, opt, m = step(params, opt, b)
+            steps += 1
+    nses = []
+    for i, w in enumerate(windows):
+        p = jax.tree.map(lambda x: x[i], params)
+        _, te = train_test_split(w)
+        ev = domst.evaluate(p, cfg, {k: jnp.asarray(v) for k, v in te.items()})
+        nses.append(float(ev["nse"]))
+    return np.asarray(nses), steps
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--watersheds", type=int, default=23)
+    ap.add_argument("--days", type=int, default=400)
+    ap.add_argument("--epochs", type=int, default=6)
+    args = ap.parse_args()
+
+    data = generate_all_watersheds(args.watersheds, num_days=args.days)
+    windows = [make_training_windows(w) for w in data.values()]
+    ip = InputPipeline(windows, batch_size=64)
+    print(f"{len(windows)} watersheds (paper: 23), {args.epochs} epochs, "
+          f"IP-D stacked execution")
+
+    t0 = time.perf_counter()
+    nse_dom, steps = train_stacked("domst", windows, ip, args.epochs)
+    t_dom = time.perf_counter() - t0
+    print(f"Dom-ST:      {steps} steps in {t_dom:.1f}s  "
+          f"mean NSE {nse_dom.mean():.3f}  min {nse_dom.min():.3f}  "
+          f"max {nse_dom.max():.3f}")
+
+    t0 = time.perf_counter()
+    nse_sh, _ = train_stacked("domst-singlehead", windows, ip, args.epochs)
+    t_sh = time.perf_counter() - t0
+    print(f"Singlehead:  mean NSE {nse_sh.mean():.3f}  ({t_sh:.1f}s)")
+    better = (nse_dom > nse_sh).mean() * 100
+    print(f"Dom-ST beats Singlehead on {better:.0f}% of watersheds "
+          f"(paper: 'almost all')")
+
+
+if __name__ == "__main__":
+    main()

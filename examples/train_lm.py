@@ -1,0 +1,71 @@
+"""Train a ~100M-parameter assigned architecture (mamba2-130m) for a few
+hundred steps on the synthetic token stream — the LM-side end-to-end
+driver.  Defaults are sized for this CPU container; --full uses the real
+130M config.
+
+    PYTHONPATH=src python examples/train_lm.py [--full] [--steps 300]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import TrainConfig, get_config, smoke_variant
+from repro.data.tokens import synthetic_token_batch
+from repro.metrics import Meter
+from repro.models import transformer as tfm
+from repro.optim import make_optimizer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full config (slow on CPU)")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        # mid-size: keeps the family but fits a CPU training budget
+        cfg = cfg.replace(num_layers=max(4, cfg.num_layers // 4),
+                          vocab_size=min(cfg.vocab_size, 8192))
+    params = tfm.init(cfg, jax.random.key(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n/1e6:.1f}M params, {args.steps} steps, "
+          f"batch {args.batch} x seq {args.seq}")
+
+    tc = TrainConfig(learning_rate=6e-4, total_steps=args.steps,
+                     warmup_steps=args.steps // 10, remat="block")
+    opt_init, opt_update = make_optimizer(tc)
+    opt = opt_init(params)
+
+    @jax.jit
+    def step(p, o, b):
+        (loss, mm), g = jax.value_and_grad(
+            lambda q: tfm.lm_loss(q, cfg, b, remat=True),
+            has_aux=True)(p)
+        p, o, om = opt_update(p, g, o)
+        return p, o, loss
+
+    meter = Meter()
+    for i in range(args.steps):
+        b = {k: jnp.asarray(v) for k, v in synthetic_token_batch(
+            cfg, args.batch, args.seq, seed=i).items()}
+        params, opt, loss = step(params, opt, b)
+        meter.update(loss=float(loss))
+        if i % max(args.steps // 15, 1) == 0:
+            print(f"step {i:4d}  loss {meter.last('loss'):.4f}  "
+                  f"({meter.elapsed():.0f}s)", flush=True)
+    print(f"done: loss {meter.last('loss'):.4f} "
+          f"(start {meter._vals['loss'][0]:.4f}) in {meter.elapsed():.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Pytree checkpointing to .npz (no external deps).
+
+Leaves are flattened with ``jax.tree.flatten_with_path``; key-paths become
+npz entry names, so restore round-trips through an *example* pytree of the
+same structure (the usual restore-into-init pattern).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save(path: str, tree: Any) -> None:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {_path_str(p): np.asarray(v) for p, v in leaves}
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    # atomic write
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
+                               suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def restore(path: str, example: Any) -> Any:
+    """Restore into the structure of ``example`` (shapes must match)."""
+    with np.load(path) as data:
+        paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(example)
+        leaves = []
+        for p, ex in paths_leaves:
+            key = _path_str(p)
+            if key not in data:
+                raise KeyError(f"checkpoint missing '{key}'")
+            arr = data[key]
+            if tuple(arr.shape) != tuple(ex.shape):
+                raise ValueError(
+                    f"shape mismatch for '{key}': ckpt {arr.shape} vs "
+                    f"example {ex.shape}")
+            leaves.append(jax.numpy.asarray(arr, dtype=ex.dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,36 @@
+"""Config registry.  Importing this package registers every architecture."""
+from repro.configs.base import (  # noqa: F401
+    ATTN_GLOBAL, ATTN_LOCAL, RECURRENT, SSM,
+    DomSTConfig, INPUT_SHAPES, ModelConfig, MoEConfig, PixConConfig,
+    RGLRUConfig, SSMConfig, ShapeConfig, TrainConfig,
+    get_config, list_configs, register,
+)
+
+# one module per assigned architecture (+ the paper's own model)
+from repro.configs import (  # noqa: F401
+    domst,
+    hubert_xlarge,
+    olmo_1b,
+    internvl2_2b,
+    deepseek_moe_16b,
+    llama3_2_3b,
+    qwen3_moe_30b_a3b,
+    mamba2_130m,
+    recurrentgemma_2b,
+    qwen2_1_5b,
+    gemma2_2b,
+)
+from repro.configs.smoke import smoke_variant  # noqa: F401
+
+ASSIGNED_ARCHS = (
+    "hubert-xlarge",
+    "olmo-1b",
+    "internvl2-2b",
+    "deepseek-moe-16b",
+    "llama3.2-3b",
+    "qwen3-moe-30b-a3b",
+    "mamba2-130m",
+    "recurrentgemma-2b",
+    "qwen2-1.5b",
+    "gemma2-2b",
+)

@@ -1,0 +1,38 @@
+"""HuBERT X-Large — audio encoder backbone [arXiv:2106.07447].
+
+48L d_model=1280 16H (kv=16) d_ff=5120 vocab=504 (k-means codebook units).
+Encoder-only (bidirectional); same transformer arch as wav2vec 2.0 XL.
+The conv waveform feature extractor is a STUB per the assignment carve-out:
+``input_specs`` supplies precomputed 512-dim frame embeddings and the model
+owns only the frame projection + transformer + unit-prediction head.
+HuBERT has no decode step (encoder-only) — decode shapes are skipped
+(DESIGN.md §5).
+"""
+from repro.configs.base import ATTN_GLOBAL, ModelConfig, register
+
+
+@register("hubert-xlarge")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge",
+        family="audio",
+        num_layers=48,
+        d_model=1280,
+        num_heads=16,
+        num_kv_heads=16,
+        head_dim=80,
+        d_ff=5120,
+        vocab_size=504,
+        layer_pattern=(ATTN_GLOBAL,),
+        norm="layernorm",
+        act="gelu",
+        qkv_bias=True,            # fairseq MHA uses biases
+        rope=False,               # HuBERT uses conv pos-emb; stubbed as learned-abs
+        causal=False,
+        tie_embeddings=False,
+        frontend="audio_stub",
+        frontend_dim=512,         # conv feature extractor output dim (stub)
+        tp_mode="heads",          # 16 heads / 16-way model axis
+        source="arXiv:2106.07447",
+        notes="encoder-only; masked unit prediction objective",
+    )

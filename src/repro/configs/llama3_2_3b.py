@@ -1,0 +1,31 @@
+"""Llama-3.2-3B — small llama3 dense decoder [hf:meta-llama/Llama-3.2-1B family].
+
+28L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=128256.
+24 heads don't divide the 16-way model axis (and pjit argument shardings
+require exact divisibility), so tensor parallelism shards d_ff
+(8192/16 = 512) and the KV-cache seq axis instead; see DESIGN.md §4.
+"""
+from repro.configs.base import ATTN_GLOBAL, ModelConfig, register
+
+
+@register("llama3.2-3b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3.2-3b",
+        family="dense",
+        num_layers=28,
+        d_model=3072,
+        num_heads=24,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=8192,
+        vocab_size=128256,
+        layer_pattern=(ATTN_GLOBAL,),
+        norm="rmsnorm",
+        act="silu",
+        rope=True,
+        rope_theta=500_000.0,
+        tie_embeddings=True,
+        tp_mode="ffn",
+        source="hf:meta-llama/Llama-3.2-3B",
+    )

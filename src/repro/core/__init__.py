@@ -1,0 +1,4 @@
+"""The paper's primary contribution: Dom-ST, a domain-aware distributed
+spatiotemporal network (Pix-Con + multihead CNN spatial block + recurrent
+temporal block), plus its domain-guided distribution strategy."""
+from repro.core import domst, gating, partitioner, pixcon, spatial, temporal  # noqa: F401

@@ -1,0 +1,114 @@
+"""Dom-ST: the full domain-aware distributed spatiotemporal network (Fig. 1)
+plus the paper's baselines and train/eval steps.
+
+Variants (paper Fig. 3 / Table 1):
+  * Singlehead          — 1 CNN head, raster partition, no Pix-Con, no (+P)
+  * Singlehead(+P)      — + target-day precipitation into the final layers
+  * Distributed-Multihead(+P) == Dom-ST — Pix-Con + dynamic partitioning +
+    head-parallel spatial block + (+P)
+
+Multi-watershed training (the paper's input-pipeline distribution, Fig. 2a)
+stacks per-watershed model replicas on a leading axis and vmaps the train
+step; on the production mesh that axis is sharded over "data"/"pod".
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DomSTConfig, ModelConfig, TrainConfig
+from repro.core.partitioner import partition_pixels, static_partition
+from repro.core.pixcon import pixcon_block, pixcon_params
+from repro.core.spatial import spatial_block, spatial_params
+from repro.core.temporal import temporal_block, temporal_params
+from repro.distributed.sharding import ParamFactory
+from repro.metrics.nse import nse
+from repro.optim import make_optimizer
+
+
+def domst_params(cfg: ModelConfig, mk: ParamFactory):
+    dc = cfg.domst
+    p: Dict[str, Any] = {}
+    if dc.use_pixcon:
+        p["pixcon"] = pixcon_params(mk, dc.pixcon)
+    p["spatial"] = spatial_params(mk, dc)
+    p["temporal"] = temporal_params(mk, dc, dc.num_heads * dc.cnn_channels)
+    return p
+
+
+def init(cfg: ModelConfig, key: jax.Array):
+    return domst_params(cfg, ParamFactory(key, mode="init"))
+
+
+def param_specs(cfg: ModelConfig):
+    return domst_params(cfg, ParamFactory(mode="spec"))
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    """batch: precip (B,T,P), dist (B,P), target_day (B,P) -> qhat (B,)."""
+    dc = cfg.domst
+    precip = batch["precip"]
+    if dc.use_pixcon:
+        x, w = pixcon_block(params["pixcon"], dc.pixcon, precip,
+                            batch["dist"], batch["target_day"])
+        parts, _ = partition_pixels(x, w, dc.num_heads)
+    else:
+        parts = static_partition(precip, dc.num_heads)
+    feats = spatial_block(params["spatial"], dc, parts)
+    qhat = temporal_block(params["temporal"], dc, feats,
+                          batch["target_day"] if dc.use_target_day else None)
+    return qhat
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, Dict]:
+    qhat = forward(params, cfg, batch)
+    err = qhat - batch["discharge"]
+    loss = jnp.mean(jnp.square(err))
+    return loss, {"mse": loss, "mae": jnp.mean(jnp.abs(err))}
+
+
+def evaluate(params, cfg: ModelConfig, batch) -> Dict[str, jax.Array]:
+    qhat = forward(params, cfg, batch)
+    return {"nse": nse(qhat, batch["discharge"]),
+            "mse": jnp.mean(jnp.square(qhat - batch["discharge"])),
+            "qhat": qhat}
+
+
+# ---------------------------------------------------------------------------
+# Train steps
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, tc: TrainConfig):
+    """Single-watershed train step (the paper's per-node unit of work)."""
+    _, opt_update = make_optimizer(tc)
+
+    @jax.jit
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch)
+        params, opt_state, om = opt_update(params, grads, opt_state)
+        return params, opt_state, {**metrics, **om, "loss": loss}
+
+    return train_step
+
+
+def make_stacked_train_step(cfg: ModelConfig, tc: TrainConfig):
+    """Vectorized multi-watershed step: params/batches have a leading
+    watershed axis (W, ...) — one replica per watershed (paper Fig. 2a),
+    sharded over the data/pod mesh axes on TPU."""
+    _, opt_update = make_optimizer(tc)
+
+    def one(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch)
+        params, opt_state, om = opt_update(params, grads, opt_state)
+        return params, opt_state, {**metrics, **om, "loss": loss}
+
+    return jax.jit(jax.vmap(one))
+
+
+def init_stacked(cfg: ModelConfig, key: jax.Array, num_watersheds: int):
+    keys = jax.random.split(key, num_watersheds)
+    return jax.vmap(lambda k: init(cfg, k))(keys)

@@ -1,0 +1,31 @@
+"""Generalized contribution gate — the paper's Pix-Con idea lifted to token
+stacks (DESIGN.md §5): a learned per-token contribution weight computed from
+the token's own features, applied multiplicatively to the residual stream
+after embedding.  For the assigned LM architectures this is an *optional*
+feature (cfg.contribution_gate), never forced on published configs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ParamFactory, constrain
+
+
+def gate_params(mk: ParamFactory, d_model: int, hidden: int = 64):
+    return {
+        "w1": mk((d_model, hidden), ("embed", "hidden")),
+        "b1": mk((hidden,), ("hidden",), init="zeros"),
+        "w2": mk((hidden, 1), ("hidden", None)),
+    }
+
+
+def contribution_gate(params, x: jax.Array, temperature: float = 1.0
+                      ) -> jax.Array:
+    """x (B,S,d) -> gated x; weight in (0,2) (identity at init mean)."""
+    h = jnp.tanh(jnp.einsum("bsd,dh->bsh", x, params["w1"].astype(x.dtype))
+                 + params["b1"].astype(x.dtype))
+    s = jnp.einsum("bsh,ho->bso", h, params["w2"].astype(x.dtype))[..., 0]
+    w = 2.0 * jax.nn.sigmoid(s.astype(jnp.float32) / temperature)
+    out = x * w[..., None].astype(x.dtype)
+    return constrain(out, ("batch", "seq", "embed"))

@@ -1,0 +1,45 @@
+"""Partitioning module (paper Fig. 1b): dynamically partitions
+spatiotemporal pixels by contribution and distributes them to devices.
+
+Pixels are ranked by Pix-Con weight and split into ``num_partitions``
+contiguous rank groups; group g feeds spatial-block head g, and heads are
+sharded over the "model" mesh axis — so the partition->device mapping of
+the paper (each head on its own GPU) becomes partition->head->mesh-shard.
+
+The sort indices are data-dependent (dynamic partitioning, per example);
+gradients flow through the gathered *values*.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def partition_pixels(x: jax.Array, w: jax.Array, num_partitions: int
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """x (B,T,P) weighted inputs, w (B,P) contributions.
+
+    Returns (parts (B, G, T, P//G) -- pixels regrouped by contribution rank,
+             order (B, P) -- the permutation used).
+    Highest-contribution pixels land in partition 0.
+    """
+    B, T, P = x.shape
+    G = num_partitions
+    assert P % G == 0, f"pixels {P} not divisible by partitions {G}"
+    # ranking is non-differentiable; gradients flow through gathered values
+    # (also avoids differentiating sort, which needs batched gathers that
+    # this jaxlib build lacks)
+    order = jnp.argsort(-jax.lax.stop_gradient(w), axis=-1)     # (B,P) desc
+    xg = jnp.take_along_axis(x, order[:, None, :], axis=2)      # (B,T,P) sorted
+    parts = xg.reshape(B, T, G, P // G).transpose(0, 2, 1, 3)   # (B,G,T,P/G)
+    return parts, order
+
+
+def static_partition(x: jax.Array, num_partitions: int) -> jax.Array:
+    """Baseline (no domain guidance): contiguous pixel blocks in raster order."""
+    B, T, P = x.shape
+    G = num_partitions
+    assert P % G == 0
+    return x.reshape(B, T, G, P // G).transpose(0, 2, 1, 3)

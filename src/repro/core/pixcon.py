@@ -1,0 +1,65 @@
+"""Pix-Con — the paper's pixel-contribution block (Fig. 1a).
+
+Computes pixel-specific weights from the domain prior (distance of each
+pixel to the nearest water source) together with the pixel's precipitation
+statistics over the input window, and transforms the spatiotemporal input
+by its local contribution to the outlet discharge:
+
+    feats_p = [dist_p, mean_t precip[t,p], max_t precip[t,p], target_day_p]
+    score_p = MLP(feats_p)                       (per pixel)
+    w_p     = sigmoid(score_p / temperature)
+    x'[t,p] = x[t,p] * w_p            (optionally sum-normalized over p)
+
+The weights are also what the partitioning module (partitioner.py) uses to
+assign pixels to spatial-block heads/devices.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PixConConfig
+from repro.distributed.sharding import ParamFactory
+
+NUM_FEATS = 4  # dist, mean, max, target-day
+
+
+def pixcon_params(mk: ParamFactory, pc: PixConConfig):
+    return {
+        "w1": mk((NUM_FEATS, pc.hidden), (None, "hidden")),
+        "b1": mk((pc.hidden,), ("hidden",), init="zeros"),
+        "w2": mk((pc.hidden, 1), ("hidden", None)),
+        "b2": mk((1,), (None,), init="zeros"),
+    }
+
+
+def pixel_features(precip: jax.Array, dist: jax.Array,
+                   target_day: jax.Array) -> jax.Array:
+    """precip (B,T,P), dist (B,P), target_day (B,P) -> (B,P,F)."""
+    mean_p = jnp.mean(precip, axis=1)
+    max_p = jnp.max(precip, axis=1)
+    return jnp.stack([dist, mean_p, max_p, target_day], axis=-1)
+
+
+def contribution_weights(params, pc: PixConConfig, precip: jax.Array,
+                         dist: jax.Array, target_day: jax.Array) -> jax.Array:
+    """-> w (B, P) in (0, 1)."""
+    f = pixel_features(precip, dist, target_day)
+    h = jnp.tanh(jnp.einsum("bpf,fh->bph", f, params["w1"]) + params["b1"])
+    s = jnp.einsum("bph,ho->bpo", h, params["w2"])[..., 0] + params["b2"][0]
+    w = jax.nn.sigmoid(s / pc.temperature)
+    if pc.normalize:
+        # keep total contribution mass ~ P (scale-preserving normalization)
+        w = w * (w.shape[-1] / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True),
+                                           1e-6))
+    return w
+
+
+def pixcon_block(params, pc: PixConConfig, precip: jax.Array,
+                 dist: jax.Array, target_day: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (transformed precip (B,T,P), weights (B,P))."""
+    w = contribution_weights(params, pc, precip, dist, target_day)
+    return precip * w[:, None, :], w

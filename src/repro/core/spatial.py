@@ -1,0 +1,64 @@
+"""Spatial block (paper Fig. 1b): multi-headed multi-channel 1D-CNN.
+
+Each head consumes one pixel partition (its "device share" of the
+watershed) and runs a multichannel temporal 1D conv over its pixels.
+Heads are vectorized on a leading head axis and sharded over the "model"
+mesh axis — the TPU-native form of the paper's one-head-per-GPU layout
+(DESIGN.md §2).  The Pallas kernel in kernels/conv1d is the TPU hot-spot
+implementation of the same op; this module is the pure-JAX reference path
+used for training on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DomSTConfig
+from repro.distributed.sharding import ParamFactory, constrain
+
+
+def spatial_params(mk: ParamFactory, dc: DomSTConfig):
+    pix_per_head = dc.num_pixels // dc.num_heads
+    return {
+        # (H, K, P/H, C): per-head temporal conv, pixel channels -> C features
+        "conv_w": mk((dc.num_heads, dc.kernel_size, pix_per_head,
+                      dc.cnn_channels),
+                     ("pix_heads", "conv", "pixels", None)),
+        "conv_b": mk((dc.num_heads, dc.cnn_channels),
+                     ("pix_heads", None), init="zeros"),
+        # second conv layer (depth gives the block some capacity)
+        "conv2_w": mk((dc.num_heads, dc.kernel_size, dc.cnn_channels,
+                       dc.cnn_channels),
+                      ("pix_heads", "conv", None, None)),
+        "conv2_b": mk((dc.num_heads, dc.cnn_channels),
+                      ("pix_heads", None), init="zeros"),
+    }
+
+
+def _conv1d_same(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x (B,T,Cin), w (K,Cin,Cout) -> (B,T,Cout), SAME padding."""
+    K = w.shape[0]
+    pad_l = (K - 1) // 2
+    pad_r = K - 1 - pad_l
+    xp = jnp.pad(x, ((0, 0), (pad_l, pad_r), (0, 0)))
+    out = sum(jnp.einsum("btc,co->bto", xp[:, i:i + x.shape[1]], w[i])
+              for i in range(K))
+    return out + b
+
+
+def spatial_block(params, dc: DomSTConfig, parts: jax.Array) -> jax.Array:
+    """parts (B, G, T, P/G) -> features (B, T, G*C).
+
+    G == dc.num_heads; the head axis is vmapped and model-sharded.
+    """
+    def one_head(xp, w1, b1, w2, b2):
+        h = jax.nn.relu(_conv1d_same(xp, w1, b1))
+        h = jax.nn.relu(_conv1d_same(h, w2, b2))
+        return h                                                 # (B,T,C)
+
+    feats = jax.vmap(one_head, in_axes=(1, 0, 0, 0, 0), out_axes=1)(
+        parts, params["conv_w"], params["conv_b"],
+        params["conv2_w"], params["conv2_b"])                    # (B,G,T,C)
+    feats = constrain(feats, ("batch", "pix_heads", "time", None))
+    B, G, T, C = feats.shape
+    return feats.transpose(0, 2, 1, 3).reshape(B, T, G * C)

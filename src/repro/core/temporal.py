@@ -1,0 +1,90 @@
+"""Temporal block (paper Fig. 1c): stacked LSTM + final layers.
+
+Receives the spatial block's features and — the paper's domain cue — the
+*target day's* precipitation (+P) injected into the final layers.
+The LSTM cell math matches kernels/lstm_cell (the Pallas hot-spot kernel);
+this is the pure-JAX path.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DomSTConfig
+from repro.distributed.sharding import ParamFactory
+
+
+def lstm_cell_params(mk: ParamFactory, in_dim: int, hidden: int):
+    return {
+        "wx": mk((in_dim, 4 * hidden), (None, "hidden")),
+        "wh": mk((hidden, 4 * hidden), ("hidden", "hidden")),
+        "b": mk((4 * hidden,), ("hidden",), init="zeros"),
+    }
+
+
+def lstm_cell(params, x_t: jax.Array, h: jax.Array, c: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Fused-gate LSTM cell.  x_t (B,D), h/c (B,H) -> (h', c')."""
+    gates = x_t @ params["wx"] + h @ params["wh"] + params["b"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c_new = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def lstm_scan(params, xs: jax.Array) -> jax.Array:
+    """xs (B,T,D) -> last hidden (B,H) via lax.scan over T."""
+    B = xs.shape[0]
+    H = params["wh"].shape[0]
+    h0 = jnp.zeros((B, H), xs.dtype)
+    c0 = jnp.zeros((B, H), xs.dtype)
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = lstm_cell(params, x_t, h, c)
+        return (h, c), h
+
+    (_, _), hs = jax.lax.scan(step, (h0, c0), xs.swapaxes(0, 1))
+    return hs[-1]
+
+
+def temporal_params(mk: ParamFactory, dc: DomSTConfig, in_dim: int):
+    p = {}
+    dim = in_dim
+    for layer in range(dc.lstm_layers):
+        p[f"lstm{layer}"] = lstm_cell_params(mk, dim, dc.lstm_hidden)
+        dim = dc.lstm_hidden
+    head_in = dc.lstm_hidden + (dc.num_pixels if dc.use_target_day else 0)
+    p["fc1"] = mk((head_in, dc.mlp_hidden), (None, "hidden"))
+    p["fc1_b"] = mk((dc.mlp_hidden,), ("hidden",), init="zeros")
+    p["fc2"] = mk((dc.mlp_hidden, 1), ("hidden", None))
+    p["fc2_b"] = mk((1,), (None,), init="zeros")
+    return p
+
+
+def temporal_block(params, dc: DomSTConfig, feats: jax.Array,
+                   target_day: jax.Array | None) -> jax.Array:
+    """feats (B,T,F), target_day (B,P) or None -> discharge prediction (B,)."""
+    x = feats
+    h = None
+    for layer in range(dc.lstm_layers):
+        lp = params[f"lstm{layer}"]
+        B, T, _ = x.shape
+        H = lp["wh"].shape[0]
+        h0 = jnp.zeros((B, H), x.dtype)
+        c0 = jnp.zeros((B, H), x.dtype)
+
+        def step(carry, x_t, lp=lp):
+            hh, cc = carry
+            hh, cc = lstm_cell(lp, x_t, hh, cc)
+            return (hh, cc), hh
+
+        (_, _), hs = jax.lax.scan(step, (h0, c0), x.swapaxes(0, 1))
+        x = hs.swapaxes(0, 1)                                    # (B,T,H)
+        h = x[:, -1]                                             # last hidden
+    if dc.use_target_day and target_day is not None:
+        h = jnp.concatenate([h, target_day], axis=-1)            # the (+P) cue
+    z = jnp.tanh(h @ params["fc1"] + params["fc1_b"])
+    return (z @ params["fc2"] + params["fc2_b"])[:, 0]

@@ -1,0 +1,3 @@
+from repro.data.synthetic_hydro import WatershedData, generate_watershed, generate_all_watersheds  # noqa: F401
+from repro.data.pipeline import InputPipeline, make_training_windows  # noqa: F401
+from repro.data.tokens import synthetic_token_batch  # noqa: F401

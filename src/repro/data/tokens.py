@@ -1,0 +1,51 @@
+"""Synthetic token/frame/patch batches for the assigned LM architectures.
+
+Token streams come from a seeded Zipfian n-gram process (so loss actually
+decreases during smoke training, unlike uniform noise).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def _zipf_tokens(rng: np.random.Generator, shape, vocab: int) -> np.ndarray:
+    # Zipfian unigram mixed with a repeat-previous process -> learnable
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    probs = 1.0 / ranks
+    probs /= probs.sum()
+    flat = rng.choice(vocab, size=int(np.prod(shape)), p=probs)
+    toks = flat.reshape(shape)
+    # second-order structure: with p=0.3, copy the previous token
+    if toks.ndim == 2 and toks.shape[1] > 1:
+        copy = rng.random(toks.shape) < 0.3
+        copy[:, 0] = False
+        shifted = np.roll(toks, 1, axis=1)
+        toks = np.where(copy, shifted, toks)
+    return toks.astype(np.int32)
+
+
+def synthetic_token_batch(cfg: ModelConfig, batch: int, seq_len: int,
+                          seed: int = 0) -> Dict[str, np.ndarray]:
+    """Batch dict matching ``input_specs`` for cfg's family."""
+    rng = np.random.default_rng(seed)
+    if cfg.family == "audio":
+        frames = rng.normal(0, 1, (batch, seq_len, cfg.frontend_dim))
+        targets = _zipf_tokens(rng, (batch, seq_len), cfg.vocab_size)
+        # HuBERT-style mask: ~8% spans masked; loss only on masked frames
+        mask = (rng.random((batch, seq_len)) < 0.08).astype(np.float32)
+        return {"frames": frames.astype(np.float32), "targets": targets,
+                "loss_mask": mask}
+    if cfg.family == "vlm":
+        p = cfg.num_patches
+        text_len = seq_len - p
+        toks = _zipf_tokens(rng, (batch, text_len + 1), cfg.vocab_size)
+        patches = rng.normal(0, 1, (batch, p, cfg.frontend_dim))
+        return {"patches": patches.astype(np.float32),
+                "tokens": toks[:, :-1],
+                "targets": toks[:, 1:]}
+    toks = _zipf_tokens(rng, (batch, seq_len + 1), cfg.vocab_size)
+    return {"tokens": toks[:, :-1], "targets": toks[:, 1:]}

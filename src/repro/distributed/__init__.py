@@ -1,0 +1,4 @@
+from repro.distributed.sharding import (  # noqa: F401
+    ParamFactory, constrain, logical_sharding, make_rules, resolve_pspec,
+    tree_pspecs, tree_shardings,
+)

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (DESIGN.md §6).
+
+Each kernel package has:
+  kernel.py — pl.pallas_call body with explicit BlockSpec VMEM tiling
+  ops.py    — jit'd public wrapper (composition, long-sequence chunking)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels: pixcon (fused contribution gating), conv1d (causal depthwise),
+lstm_cell (fused gates), ssd_chunk (Mamba-2 intra-chunk dual form),
+local_attn (sliding-window flash attention).
+
+On this CPU container kernels run with interpret=True; on TPU the same
+pallas_call lowers natively.
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.conv1d.ops import causal_conv1d  # noqa: F401

@@ -1,0 +1,61 @@
+"""Causal depthwise conv1d kernel (Mamba-2 conv, Dom-ST spatial head,
+RG-LRU temporal conv).
+
+Grid: (B/bt, C/ct).  Each block holds its (bt, S + K - 1, ct) slice in
+VMEM — the caller front-pads x by K-1 zeros so every block's window reads
+are in-bounds and *aligned* (no halo exchange between blocks; the K-1
+overlap is re-read from HBM, which for K<=4 is <0.1% extra traffic).
+The ops.py wrapper chunks long sequences so the S-extent of a block stays
+VMEM-sized, carrying the K-1 tail between chunks exactly like the decode
+path does.
+
+Channel tiles are multiples of 128 where C allows (lane alignment); the
+kernel is memory-bound (K FMA per element), so the win on TPU is purely
+the fusion of pad + K shifted multiplies + bias + SiLU into one pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(xp_ref, w_ref, b_ref, o_ref, *, K: int, S: int,
+                 activation: str):
+    xp = xp_ref[...].astype(jnp.float32)                        # (bt, S+K-1, ct)
+    w = w_ref[...].astype(jnp.float32)                          # (K, ct)
+    b = b_ref[...].astype(jnp.float32)                          # (ct,)
+    acc = jnp.zeros((xp.shape[0], S, xp.shape[2]), jnp.float32)
+    for k in range(K):
+        acc = acc + xp[:, k:k + S, :] * w[k][None, None, :]
+    acc = acc + b[None, None, :]
+    if activation == "silu":
+        acc = acc * jax.nn.sigmoid(acc)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def causal_conv1d_pallas(x: jax.Array, w: jax.Array, b: jax.Array, *,
+                         activation: str = "none",
+                         block_b: int = 8, block_c: int = 128,
+                         interpret: bool = True) -> jax.Array:
+    B, S, C = x.shape
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))               # causal pad
+    bt = min(block_b, B)
+    ct = min(block_c, C)
+    grid = (pl.cdiv(B, bt), pl.cdiv(C, ct))
+    kern = functools.partial(_conv_kernel, K=K, S=S, activation=activation)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, S + K - 1, ct), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((K, ct), lambda i, j: (0, j)),
+            pl.BlockSpec((ct,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bt, S, ct), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((B, S, C), x.dtype),
+        interpret=interpret,
+    )(xp, w, b)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the causal depthwise conv1d kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_conv1d_ref(x: jax.Array, w: jax.Array, b: jax.Array, *,
+                      activation: str = "none") -> jax.Array:
+    """x (B,S,C), w (K,C) depthwise, b (C,) -> (B,S,C), causal padding.
+
+    y[t] = b + sum_k w[k] * x[t - (K-1) + k]    (x[<0] == 0)
+    """
+    K = w.shape[0]
+    xf = x.astype(jnp.float32)
+    xp = jnp.pad(xf, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(jnp.float32)
+              for i in range(K))
+    out = out + b.astype(jnp.float32)
+    if activation == "silu":
+        out = jax.nn.silu(out)
+    elif activation != "none":
+        raise ValueError(activation)
+    return out.astype(x.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.local_attn.ops import local_attention_fused  # noqa: F401

@@ -1,0 +1,105 @@
+"""Sliding-window flash attention Pallas kernel.
+
+Grid: (B, Hq, S/bq, W/bq + 1) — the innermost axis walks the KV blocks in
+a q-block's window; the output block index repeats across it, so the
+online-softmax state (m, l, acc) lives in VMEM scratch and the output is
+committed on the last window step.  FLOPs are O(S * (W + bq)) — the
+sub-quadratic path gemma2/recurrentgemma need at long context — and live
+VMEM is one (bq, bq) score tile + the (bq, D) accumulator.
+
+GQA is handled in the index maps (kv head = q head // G), so no repeated
+K/V ever materializes.  Positions are derived from grid indices; KV block
+reads below position 0 are clamped to block 0 and masked.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq: int, nwin: int, window: int, causal: bool):
+    i = pl.program_id(2)                 # q block
+    j = pl.program_id(3)                 # window step
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...][0, :, 0, :].astype(jnp.float32)              # (bq, D)
+    k = k_ref[...][0, :, 0, :].astype(jnp.float32)              # (bq, D)
+    v = v_ref[...][0, :, 0, :].astype(jnp.float32)
+
+    D = q.shape[-1]
+    kb = i - (nwin - 1) + j                                     # true kv block
+    q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+    k_pos = kb * bq + jax.lax.broadcasted_iota(jnp.int32, (1, bq), 1)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) / np.sqrt(D)
+    delta = q_pos - k_pos
+    mask = (k_pos >= 0) & (delta < window)
+    if causal:
+        mask = mask & (delta >= 0)
+    else:
+        mask = mask & (-delta < window)
+    s = jnp.where(mask, s, -1e30)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+        jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+
+    @pl.when(j == nwin - 1)
+    def _commit():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[...] = out[None, :, None, :].astype(o_ref.dtype)
+
+
+def local_attention_pallas(q, k, v, *, window: int, causal: bool = True,
+                           block_q: int = 128, interpret: bool = True):
+    """q (B,S,Hq,D), k/v (B,S,Hkv,D) -> (B,S,Hq,D)."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    bq = min(block_q, S)
+    assert S % bq == 0, (S, bq)
+    win_blocks = (window + bq - 1) // bq
+    nwin = win_blocks + 1
+    nqb = S // bq
+    grid = (B, Hq, nqb, nwin)
+
+    def k_idx(b, h, i, j):
+        kb = i - (nwin - 1) + j
+        return (b, jnp.maximum(kb, 0), h // G, 0)
+
+    kern = functools.partial(_kernel, bq=bq, nwin=nwin, window=window,
+                             causal=causal)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bq, 1, D), k_idx),
+            pl.BlockSpec((1, bq, 1, D), k_idx),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, Hq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max
+            pltpu.VMEM((bq,), jnp.float32),      # running denom
+            pltpu.VMEM((bq, D), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

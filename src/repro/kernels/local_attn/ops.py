@@ -1,0 +1,28 @@
+"""jit'd wrapper: pads S to a q-block multiple around the kernel."""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.local_attn.kernel import local_attention_pallas
+
+INTERPRET = jax.default_backend() != "tpu" or \
+    os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "causal", "block_q"))
+def local_attention_fused(q, k, v, *, window: int, causal: bool = True,
+                          block_q: int = 128):
+    B, S, Hq, D = q.shape
+    bq = min(block_q, S)
+    pad = (-S) % bq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    out = local_attention_pallas(q, k, v, window=window, causal=causal,
+                                 block_q=bq, interpret=INTERPRET)
+    return out[:, :S]

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the sliding-window flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def local_attention_ref(q, k, v, *, window: int, causal: bool = True):
+    """q (B,S,Hq,D), k/v (B,S,Hkv,D); causal band 0 <= q_pos-k_pos < window."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    kq = jnp.repeat(k, G, axis=2)
+    vq = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kq.astype(jnp.float32)) / np.sqrt(D)
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = (qi - ki < window)
+    if causal:
+        mask &= ki <= qi
+    else:
+        mask &= (ki - qi < window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vq.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,66 @@
+"""Fused LSTM cell kernel: both gate matmuls + all four nonlinearities +
+state update in one VMEM pass (the paper's temporal-block hot-spot).
+
+Grid: (B/bt, H/ht).  Weight layout (D, 4, H) / (H, 4, H) so an output
+H-tile slices the last axis only — the two dot_generals contract the full
+D / H axes (which are <=~2k for Dom-ST; they hit the MXU as (bt, D) x
+(D, 4*ht) matmuls), and the gate nonlinearities + state update fuse in
+registers instead of materializing the (B, 4H) gate tensor in HBM.
+Tiles: ht a multiple of 128 where H allows (lane alignment), bt 8.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref,
+                 ho_ref, co_ref):
+    x = x_ref[...].astype(jnp.float32)                          # (bt, D)
+    h = h_ref[...].astype(jnp.float32)                          # (bt, H)
+    c = c_ref[...].astype(jnp.float32)                          # (bt, ht)
+    wx = wx_ref[...].astype(jnp.float32)                        # (D, 4, ht)
+    wh = wh_ref[...].astype(jnp.float32)                        # (H, 4, ht)
+    b = b_ref[...].astype(jnp.float32)                          # (4, ht)
+
+    D = x.shape[1]
+    Hfull = h.shape[1]
+    ht = c.shape[1]
+    gates = (jax.lax.dot_general(x, wx.reshape(D, 4 * ht),
+                                 (((1,), (0,)), ((), ())))
+             + jax.lax.dot_general(h, wh.reshape(Hfull, 4 * ht),
+                                   (((1,), (0,)), ((), ()))))
+    gates = gates.reshape(x.shape[0], 4, ht) + b[None]
+    i, f, g, o = gates[:, 0], gates[:, 1], gates[:, 2], gates[:, 3]
+    c_new = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    ho_ref[...] = h_new.astype(ho_ref.dtype)
+    co_ref[...] = c_new.astype(co_ref.dtype)
+
+
+def lstm_cell_pallas(x, h, c, wx, wh, b, *, block_b: int = 8,
+                     block_h: int = 128, interpret: bool = True):
+    B, D = x.shape
+    H = h.shape[1]
+    bt = min(block_b, B)
+    ht = min(block_h, H)
+    grid = (pl.cdiv(B, bt), pl.cdiv(H, ht))
+    out_shape = (jax.ShapeDtypeStruct((B, H), h.dtype),
+                 jax.ShapeDtypeStruct((B, H), c.dtype))
+    return pl.pallas_call(
+        _lstm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, H), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, ht), lambda i, j: (i, j)),
+            pl.BlockSpec((D, 4, ht), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((H, 4, ht), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((4, ht), lambda i, j: (0, j)),
+        ],
+        out_specs=(pl.BlockSpec((bt, ht), lambda i, j: (i, j)),
+                   pl.BlockSpec((bt, ht), lambda i, j: (i, j))),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, h, c, wx, wh, b)

@@ -1,0 +1,29 @@
+"""jit'd wrapper for the fused LSTM cell (+ layout adapter from the
+(D, 4H) packed layout used by core/temporal.py)."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lstm_cell.kernel import lstm_cell_pallas
+
+INTERPRET = jax.default_backend() != "tpu" or \
+    os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
+@jax.jit
+def lstm_cell_fused(x, h, c, wx, wh, b):
+    """Fused LSTM cell.  wx (D,4,H), wh (H,4,H), b (4,H)."""
+    return lstm_cell_pallas(x, h, c, wx, wh, b, interpret=INTERPRET)
+
+
+def pack_weights(wx_flat: jax.Array, wh_flat: jax.Array, b_flat: jax.Array):
+    """(D,4H)/(H,4H)/(4H,) packed (i|f|g|o) -> kernel layout (D,4,H) etc."""
+    D, H4 = wx_flat.shape
+    H = H4 // 4
+    wx = wx_flat.reshape(D, 4, H)
+    wh = wh_flat.reshape(wh_flat.shape[0], 4, H)
+    b = b_flat.reshape(4, H)
+    return wx, wh, b

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the fused LSTM cell kernel.
+
+Weight layout: wx (D, 4, H), wh (H, 4, H), b (4, H) with gate order
+(i, f, g, o); forget bias +1 matches core/temporal.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b):
+    """x (B,D), h/c (B,H) -> (h', c'), all math in fp32."""
+    xf = x.astype(jnp.float32)
+    hf = h.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    gates = (jnp.einsum("bd,dgh->bgh", xf, wx.astype(jnp.float32))
+             + jnp.einsum("bk,kgh->bgh", hf, wh.astype(jnp.float32))
+             + b.astype(jnp.float32))
+    i, f, g, o = gates[:, 0], gates[:, 1], gates[:, 2], gates[:, 3]
+    c_new = jax.nn.sigmoid(f + 1.0) * cf + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new.astype(h.dtype), c_new.astype(c.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.pixcon.ops import pixcon_gate  # noqa: F401

@@ -1,0 +1,26 @@
+"""jit'd public wrapper for the fused Pix-Con gating kernel."""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pixcon.kernel import pixcon_gate_pallas
+
+# interpret=True on CPU (this container); native lowering on TPU.
+INTERPRET = jax.default_backend() != "tpu" or \
+    os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
+@functools.partial(jax.jit, static_argnames=("temperature", "normalize"))
+def pixcon_gate(x: jax.Array, feats: jax.Array, w1: jax.Array, b1: jax.Array,
+                w2: jax.Array, b2: jax.Array, *, temperature: float = 1.0,
+                normalize: bool = True) -> jax.Array:
+    """Fused Pix-Con gating.  x (B,T,P), feats (B,P,F) -> gated x."""
+    w2v = w2.reshape(-1)
+    b2v = b2.reshape(1)
+    return pixcon_gate_pallas(x, feats, w1, b1, w2v, b2v,
+                              temperature=temperature, normalize=normalize,
+                              interpret=INTERPRET)

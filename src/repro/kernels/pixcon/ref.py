@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused Pix-Con gating kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pixcon_gate_ref(x: jax.Array, feats: jax.Array, w1: jax.Array,
+                    b1: jax.Array, w2: jax.Array, b2: jax.Array,
+                    *, temperature: float = 1.0,
+                    normalize: bool = True) -> jax.Array:
+    """x (B,T,P), feats (B,P,F); MLP weights w1 (F,H), b1 (H,), w2 (H,), b2 ().
+
+    score = tanh(feats @ w1 + b1) @ w2 + b2
+    w     = sigmoid(score / temperature)     [optionally sum-normalized * P]
+    out   = x * w[:, None, :]
+    """
+    h = jnp.tanh(jnp.einsum("bpf,fh->bph", feats.astype(jnp.float32),
+                            w1.astype(jnp.float32)) + b1.astype(jnp.float32))
+    s = jnp.einsum("bph,h->bp", h, w2.astype(jnp.float32)) + b2.astype(jnp.float32)
+    w = jax.nn.sigmoid(s / temperature)
+    if normalize:
+        w = w * (w.shape[-1] / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-6))
+    return (x.astype(jnp.float32) * w[:, None, :]).astype(x.dtype)

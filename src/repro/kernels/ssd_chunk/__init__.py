@@ -1,0 +1,1 @@
+from repro.kernels.ssd_chunk.ops import ssd_chunk_fused  # noqa: F401

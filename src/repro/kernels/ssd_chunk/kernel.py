@@ -1,0 +1,69 @@
+"""SSD intra-chunk Pallas kernel (Mamba-2 dual form, steps 1-2).
+
+TPU adaptation story (DESIGN.md §2/§6): the selective scan's chunk-local
+work is exactly two MXU matmuls per (chunk, head) — scores = C B^T and
+y = (scores * L) xdt — plus a rank-1-decay state reduction.  The kernel
+fuses the segment-decay mask construction (cumsum differences ->
+exp -> tril) with both matmuls in VMEM, so the (Q,Q) decay matrix L never
+exists in HBM.
+
+Grid: (B*nc, H) — one program per (sequence chunk, head).  VMEM per
+program: Q*N*2 + Q*P + Q*Q fp32 ≈ 0.6 MB at (Q,N,P)=(256,128,64).
+Q and N are multiples of 128 in the shipped configs (MXU-aligned);
+P=64 rides the lane dimension.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(C_ref, B_ref, x_ref, dA_ref, y_ref, st_ref):
+    C = C_ref[...][0, 0].astype(jnp.float32)                    # (Q,N)
+    B = B_ref[...][0, 0].astype(jnp.float32)                    # (Q,N)
+    x = x_ref[...][0, 0].astype(jnp.float32)                    # (Q,P)
+    dA = dA_ref[...][0, 0].astype(jnp.float32)                  # (Q,)
+
+    Q = C.shape[0]
+    seg = dA[:, None] - dA[None, :]
+    il = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jl = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(il >= jl, jnp.exp(seg), 0.0)                  # (Q,Q) in VMEM only
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())))  # C B^T
+    y = jax.lax.dot_general((scores * L).astype(x.dtype), x,
+                            (((1,), (0,)), ((), ())))           # (Q,P)
+    decay_out = jnp.exp(dA[-1] - dA)                            # (Q,)
+    bw = B * decay_out[:, None]
+    st = jax.lax.dot_general(x, bw, (((0,), (0,)), ((), ())))   # (P,N)
+    y_ref[...] = y[None, None].astype(y_ref.dtype)
+    st_ref[...] = st[None, None].astype(st_ref.dtype)
+
+
+def ssd_chunk_pallas(C, B, xdt, dA_cs, *, interpret: bool = True):
+    """C,B (BN, H, Q, N); xdt (BN, H, Q, P); dA_cs (BN, H, Q).
+
+    BN = batch*chunks flattened.  Returns (y (BN,H,Q,P), state (BN,H,P,N)).
+    """
+    BN, H, Q, N = C.shape
+    P = xdt.shape[-1]
+    grid = (BN, H)
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, N), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, Q, P), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, Q), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, Q, P), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda i, j: (i, j, 0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((BN, H, Q, P), xdt.dtype),
+            jax.ShapeDtypeStruct((BN, H, P, N), jnp.float32),
+        ),
+        interpret=interpret,
+    )(C, B, xdt, dA_cs)

@@ -1,0 +1,29 @@
+"""jit'd wrapper: layout adaptation from ssm.ssd_chunked's (B,nc,...)
+tensors to the kernel's flattened (B*nc, H, ...) grid."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_chunk.kernel import ssd_chunk_pallas
+
+INTERPRET = jax.default_backend() != "tpu" or \
+    os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
+@jax.jit
+def ssd_chunk_fused(Cc, Bc, xdt, dA_cs):
+    """Cc/Bc (B,nc,Q,H,N), xdt (B,nc,Q,H,P), dA_cs (B,nc,H,Q) ->
+    (y_diag (B,nc,Q,H,P), states (B,nc,H,P,N))."""
+    Bsz, nc, Q, H, N = Cc.shape
+    P = xdt.shape[-1]
+    to_k = lambda t: t.transpose(0, 1, 3, 2, 4).reshape(Bsz * nc, H, Q, -1)
+    y, st = ssd_chunk_pallas(
+        to_k(Cc), to_k(Bc), to_k(xdt),
+        dA_cs.reshape(Bsz * nc, H, Q),
+        interpret=INTERPRET)
+    y = y.reshape(Bsz, nc, H, Q, P).transpose(0, 1, 3, 2, 4)
+    st = st.reshape(Bsz, nc, H, P, N)
+    return y, st

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel (Mamba-2 dual form).
+
+Per (batch, chunk, head): given the chunk's C (Q,N), B (Q,N), dt-weighted
+inputs xdt (Q,P) and within-chunk cumulative log-decay dA_cs (Q,):
+
+  L[i,j]   = exp(dA_cs[i] - dA_cs[j])  for i >= j else 0   (segment decay)
+  y_diag   = ((C @ B^T) * L) @ xdt                          (Q,P)
+  decay_out= exp(dA_cs[-1] - dA_cs)                         (Q,)
+  state    = (B * decay_out[:,None] * ... )^T formulation:
+  state    = einsum('qn,q,qp->pn', B, decay_out, xdt)       (P,N)
+
+These are steps 1-2 of ssm.ssd_chunked; the inter-chunk recurrence and the
+state->output term stay in JAX (tiny O(S/Q) scan).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(C, B, xdt, dA_cs):
+    """C,B (..., Q, N); xdt (..., Q, P); dA_cs (..., Q) ->
+    (y_diag (..., Q, P), state (..., P, N)).  fp32 math."""
+    C = C.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    xdt = xdt.astype(jnp.float32)
+    dA_cs = dA_cs.astype(jnp.float32)
+    Q = C.shape[-2]
+    seg = dA_cs[..., :, None] - dA_cs[..., None, :]             # (...,Q,Q)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask, jnp.exp(seg), 0.0)
+    scores = jnp.einsum("...qn,...kn->...qk", C, B)
+    y = jnp.einsum("...qk,...kp->...qp", scores * L, xdt)
+    decay_out = jnp.exp(dA_cs[..., -1:] - dA_cs)                # (...,Q)
+    state = jnp.einsum("...qn,...q,...qp->...pn", B, decay_out, xdt)
+    return y, state

@@ -1,0 +1,247 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# unroll layer/loss scans so cost_analysis & collective parsing see the
+# whole program (XLA counts a while body once) — dry-run only.
+os.environ.setdefault("REPRO_SCAN_UNROLL", "1")
+
+"""Multi-pod dry-run (deliverable (e)) + roofline-term capture (g).
+
+For every (architecture x input-shape x mesh) combination this lowers and
+compiles the appropriate step (train_step / prefill_step / serve_step) for
+the production mesh — (16,16) "data","model" single-pod and (2,16,16)
+"pod","data","model" multi-pod — using ShapeDtypeStruct inputs (no
+allocation), then records:
+
+  * memory_analysis()      — proves the program fits per-device HBM
+  * cost_analysis()        — HLO FLOPs / bytes for the roofline terms
+  * collective bytes       — parsed from the post-GSPMD compiled HLO text
+                             (all-gather / all-reduce / reduce-scatter /
+                              all-to-all / collective-permute)
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json; EXPERIMENTS.md
+§Dry-run / §Roofline and benchmarks/roofline.py read from there.
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k [--multipod]
+  python -m repro.launch.dryrun --all [--multipod] [--jobs N]
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.configs.base import TrainConfig
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import lower_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "..", "..", "..", "results", "dryrun")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]+|pred)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^=]*?\))|(?:[a-z]+[0-9]*\[[^\]]*\][^\s]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device bytes moved by each collective type (result shapes)."""
+    seen_done = set()
+    out = {k: 0 for k in ("all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute")}
+    counts = {k: 0 for k in out}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_txt, kind = m.group(1), m.group(2)
+        # async pairs appear as -start/-done; -done result repeats the
+        # buffer, so only count -start (or the sync form).
+        if "-done(" in m.group(0):
+            continue
+        out[kind] += _shape_bytes(shape_txt)
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": int(sum(out.values()))}
+
+
+def _compile(cfg, shape_name, mesh, tc, sequence_parallel,
+             serve_bf16=False):
+    t0 = time.time()
+    lowered, kind = lower_step(cfg, shape_name, mesh, tc=tc,
+                               sequence_parallel=sequence_parallel,
+                               serve_bf16=serve_bf16)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    return lowered, compiled, kind, t_lower, time.time() - t0
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            sequence_parallel: bool = False, tag: str = "",
+            fsdp: bool = False, accum: int = 1, serve_bf16: bool = False,
+            out_dir: str = RESULTS_DIR) -> dict:
+    cfg = get_config(arch)
+    mesh_name = "multipod" if multi_pod else "pod"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tc = TrainConfig(remat="block", fsdp=fsdp, grad_accum=accum)
+
+    # Pass 1 — ROLLED layer scan: the production program; its
+    # memory_analysis is the "fits in HBM" proof (while-loop buffers
+    # are reused across layers).
+    os.environ["REPRO_SCAN_UNROLL"] = "0"
+    _, compiled_mem, kind, tl0, tc0 = _compile(
+        cfg, shape_name, mesh, tc, sequence_parallel, serve_bf16)
+    # Pass 2 — UNROLLED: same math, loops unrolled so cost_analysis and
+    # the HLO collective sweep see every layer (XLA counts a while body
+    # once).  Its temp size is NOT meaningful (no cross-layer reuse).
+    # grad_accum is forced to 1 here: per-step FLOPs/collectives are
+    # identical and the rolled accumulation loop would undercount.
+    os.environ["REPRO_SCAN_UNROLL"] = "1"
+    tc_cost = TrainConfig(remat="block", fsdp=fsdp, grad_accum=1)
+    _, compiled_cost, _, tl1, tc1 = _compile(
+        cfg, shape_name, mesh, tc_cost, sequence_parallel, serve_bf16)
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "step_kind": kind, "tag": tag,
+        "devices": int(np.prod(mesh.devices.shape)),
+        "mesh_shape": list(mesh.devices.shape),
+        "lower_s": round(tl0 + tl1, 2),
+        "compile_s": round(tc0 + tc1, 2),
+        "opts": {"fsdp": fsdp, "grad_accum": accum, "serve_bf16": serve_bf16,
+                 "moe_shardmap": os.environ.get("REPRO_MOE_SHARDMAP", "1")},
+    }
+    try:
+        ma = compiled_mem.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(ma, k)) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes")
+            if hasattr(ma, k)}
+        print("memory_analysis (rolled):", rec["memory"])
+    except Exception as e:  # CPU backend may not implement it
+        rec["memory"] = {"error": str(e)[:200]}
+    try:
+        ca = compiled_cost.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["cost"] = {k: float(v) for k, v in ca.items()
+                       if isinstance(v, (int, float)) and (
+                           "flops" in k or "bytes" in k or "utilization" in k)}
+        print("cost_analysis: flops=%.3e bytes=%.3e" % (
+            rec["cost"].get("flops", -1), rec["cost"].get("bytes accessed", -1)))
+    except Exception as e:
+        rec["cost"] = {"error": str(e)[:200]}
+    hlo = compiled_cost.as_text()
+    rec["collectives"] = parse_collectives(hlo)
+    rec["hlo_bytes"] = len(hlo)
+    print("collectives:", rec["collectives"]["bytes"],
+          "counts:", rec["collectives"]["counts"])
+
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{arch}__{shape_name}__{mesh_name}"
+    if tag:
+        name += f"__{tag}"
+    with open(os.path.join(out_dir, name + ".json"), "w") as f:
+        json.dump(rec, f, indent=2)
+    print(f"OK {name}  lower={rec['lower_s']}s compile={rec['compile_s']}s")
+    return rec
+
+
+def matrix(multi_pod_also: bool = True):
+    """The full (arch x shape) baseline list, with documented skips."""
+    combos = []
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for sname, shape in INPUT_SHAPES.items():
+            if shape.kind == "decode" and not cfg.supports_decode():
+                continue  # encoder-only: no decode step (DESIGN.md §5)
+            if sname == "long_500k":
+                if not cfg.supports_decode():
+                    continue
+                if not cfg.sub_quadratic():
+                    if arch == "gemma2-2b":
+                        combos.append(("gemma2-2b-localonly", sname))
+                    continue  # full-attention arch: skip (DESIGN.md §5)
+            combos.append((arch, sname))
+    return combos
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--seqpar", action="store_true",
+                    help="sequence-parallel activation rules (perf exp)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--servebf16", action="store_true")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--all", action="store_true",
+                    help="run the full matrix in subprocesses")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    if args.list:
+        for a, s in matrix():
+            print(a, s)
+        return
+
+    if args.all:
+        fails = []
+        for a, s in matrix():
+            for mp in ([False, True] if True else [False]):
+                name = f"{a}__{s}__{'multipod' if mp else 'pod'}"
+                path = os.path.join(args.out, name + ".json")
+                if os.path.exists(path):
+                    print("skip (done)", name)
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", a, "--shape", s, "--out", args.out]
+                if mp:
+                    cmd.append("--multipod")
+                print(">>", " ".join(cmd), flush=True)
+                try:
+                    r = subprocess.run(cmd, timeout=2400)
+                    code = r.returncode
+                except subprocess.TimeoutExpired:
+                    code = -9
+                    print("TIMEOUT", name, flush=True)
+                if code != 0:
+                    fails.append(name)
+        print("FAILURES:", fails if fails else "none")
+        sys.exit(1 if fails else 0)
+
+    run_one(args.arch, args.shape, multi_pod=args.multipod,
+            sequence_parallel=args.seqpar, tag=args.tag,
+            fsdp=args.fsdp, accum=args.accum, serve_bf16=args.servebf16,
+            out_dir=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Production mesh construction (TPU v5e target).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (required so smoke tests see 1 CPU device while
+the dry-run sees 512 placeholder devices).
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(jax.devices())} — "
+            "the dry-run launcher must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import")
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke runs (same axis names, sizes 1x1)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

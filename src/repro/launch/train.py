@@ -1,0 +1,159 @@
+"""Training launcher.
+
+Two drive modes, matching the paper's two layers of the system:
+
+  * ``--arch domst*``  — multi-watershed Dom-ST training on the synthetic
+    hydrology dataset with the paper's I.P. distribution (sequential or
+    stacked/IP-D execution);
+  * any assigned LM arch — reduced-variant (``--smoke``) or full-config
+    token training on synthetic Zipf streams.
+
+On this CPU container the mesh is 1x1; the same script drives the
+production mesh on real hardware (``--mesh pod|multipod``).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch domst --watersheds 4 --epochs 3
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.configs import TrainConfig, get_config, smoke_variant
+from repro.core import domst
+from repro.data.pipeline import InputPipeline, make_training_windows, train_test_split
+from repro.data.synthetic_hydro import generate_all_watersheds
+from repro.data.tokens import synthetic_token_batch
+from repro.metrics import Meter
+from repro.models import transformer as tfm
+from repro.optim import make_optimizer
+
+
+def train_domst(args) -> dict:
+    cfg = get_config(args.arch)
+    tc = TrainConfig(learning_rate=args.lr, total_steps=args.steps or 2000,
+                     warmup_steps=50)
+    data = generate_all_watersheds(args.watersheds, num_days=args.days)
+    windows = [make_training_windows(w) for w in data.values()]
+    ip = InputPipeline(windows, batch_size=args.batch_size, seed=args.seed)
+    meter = Meter()
+
+    if args.mode == "stacked":          # IP-D: all watersheds per step
+        params = domst.init_stacked(cfg, jax.random.key(args.seed),
+                                    len(windows))
+        opt_init, _ = make_optimizer(tc)
+        opt = jax.vmap(opt_init)(params)
+        step = domst.make_stacked_train_step(cfg, tc)
+        for epoch in range(args.epochs):
+            for batch in ip.stacked_batches(epoch):
+                b = {k: jnp.asarray(v) for k, v in batch.items()}
+                params, opt, m = step(params, opt, b)
+            meter.update(loss=float(jnp.mean(m["loss"])))
+            print(f"epoch {epoch} mean loss {meter.last('loss'):.4f} "
+                  f"({meter.elapsed():.1f}s)", flush=True)
+    else:                               # sequential: one watershed at a time
+        step = domst.make_train_step(cfg, tc)
+        opt_init, _ = make_optimizer(tc)
+        all_params = []
+        for w in windows:
+            params = domst.init(cfg, jax.random.fold_in(
+                jax.random.key(args.seed), w.watershed_id))
+            opt = opt_init(params)
+            for epoch in range(args.epochs):
+                for batch in ip.batches(w, epoch):
+                    b = {k: jnp.asarray(v) for k, v in batch.items()}
+                    params, opt, m = step(params, opt, b)
+            all_params.append(params)
+            print(f"watershed {w.watershed_id} loss {float(m['loss']):.4f} "
+                  f"({meter.elapsed():.1f}s)", flush=True)
+        params = all_params
+
+    # evaluate NSE per watershed
+    nses = []
+    plist = (params if isinstance(params, list)
+             else [jax.tree.map(lambda x, i=i: x[i], params)
+                   for i in range(len(windows))])
+    for p, w in zip(plist, windows):
+        _, te = train_test_split(w)
+        ev = domst.evaluate(p, cfg, {k: jnp.asarray(v) for k, v in te.items()})
+        nses.append(float(ev["nse"]))
+    result = {"arch": args.arch, "mode": args.mode,
+              "mean_nse": float(np.mean(nses)), "nse": nses,
+              "wall_s": meter.elapsed()}
+    print(json.dumps(result, indent=2))
+    if args.ckpt:
+        ckpt.save(args.ckpt, plist[0])
+        print("saved", args.ckpt)
+    return result
+
+
+def train_lm(args) -> dict:
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    tc = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                     warmup_steps=max(args.steps // 10, 1), remat="block")
+    params = tfm.init(cfg, jax.random.key(args.seed))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n_params/1e6:.1f}M params")
+    opt_init, opt_update = make_optimizer(tc)
+    opt = opt_init(params)
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: tfm.lm_loss(p, cfg, batch), has_aux=True)(params)
+        params, opt, om = opt_update(params, grads, opt)
+        return params, opt, {**metrics, **om, "loss": loss}
+
+    meter = Meter()
+    losses = []
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in synthetic_token_batch(
+            cfg, args.batch_size, args.seq_len, seed=args.seed + i).items()}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+        if i % max(args.steps // 10, 1) == 0:
+            print(f"step {i:5d} loss {losses[-1]:.4f} "
+                  f"({meter.elapsed():.1f}s)", flush=True)
+    result = {"arch": cfg.name, "first_loss": losses[0],
+              "last_loss": losses[-1], "wall_s": meter.elapsed()}
+    print(json.dumps(result))
+    if args.ckpt:
+        ckpt.save(args.ckpt, params)
+        print("saved", args.ckpt)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--epochs", type=int, default=5)
+    ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--watersheds", type=int, default=23)
+    ap.add_argument("--days", type=int, default=400)
+    ap.add_argument("--mode", choices=("stacked", "sequential"),
+                    default="stacked")
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+    if args.arch.startswith("domst"):
+        train_domst(args)
+    else:
+        train_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.metrics.nse import nse  # noqa: F401
+from repro.metrics.meters import Meter  # noqa: F401

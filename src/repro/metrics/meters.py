@@ -1,0 +1,30 @@
+"""Lightweight host-side metric accumulation for training loops."""
+from __future__ import annotations
+
+import collections
+import time
+from typing import Dict, List
+
+
+class Meter:
+    def __init__(self) -> None:
+        self._vals: Dict[str, List[float]] = collections.defaultdict(list)
+        self._t0 = time.perf_counter()
+
+    def update(self, **metrics: float) -> None:
+        for k, v in metrics.items():
+            self._vals[k].append(float(v))
+
+    def mean(self, key: str) -> float:
+        v = self._vals.get(key, [])
+        return sum(v) / len(v) if v else float("nan")
+
+    def last(self, key: str) -> float:
+        v = self._vals.get(key, [])
+        return v[-1] if v else float("nan")
+
+    def elapsed(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def summary(self) -> Dict[str, float]:
+        return {k: self.mean(k) for k in self._vals}

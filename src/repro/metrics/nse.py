@@ -1,0 +1,18 @@
+"""Nash–Sutcliffe efficiency — the paper's model-evaluation metric [13,14].
+
+NSE = 1 - sum((obs - sim)^2) / sum((obs - mean(obs))^2)
+
+NSE = 1 is a perfect model; NSE = 0 matches the observed mean; NSE < 0 is
+worse than predicting the mean.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def nse(sim, obs) -> jnp.ndarray:
+    sim = jnp.asarray(sim, jnp.float32).reshape(-1)
+    obs = jnp.asarray(obs, jnp.float32).reshape(-1)
+    num = jnp.sum(jnp.square(obs - sim))
+    den = jnp.sum(jnp.square(obs - jnp.mean(obs)))
+    return 1.0 - num / jnp.maximum(den, 1e-12)

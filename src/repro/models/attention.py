@@ -1,0 +1,404 @@
+"""Attention: GQA projections + flash-style chunked attention + KV cache.
+
+Three execution paths, all pure ``jax.lax`` (TPU-friendly, no S x S score
+materialization):
+
+* ``flash_attention``      — global (causal or bidirectional): online-softmax
+                             scan over KV blocks; memory O(S * block).
+* ``local_attention``      — sliding window: scan over Q blocks, each
+                             attending to a fixed-size KV slice (window+block);
+                             FLOPs O(S * window), the sub-quadratic path.
+* ``decode_attention``     — one query token vs. a (possibly ring-buffer)
+                             cache with per-slot absolute positions.
+
+Layouts are BSHD: q (B, S, Hq, D); k/v (B, S, Hkv, D).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParamFactory, constrain
+from repro.models.layers import apply_norm, apply_rope, norm_params
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+def attn_params(mk: ParamFactory, cfg: ModelConfig):
+    d, hq, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim()
+    p = {
+        "wq": mk((d, hq, dh), ("embed", "heads", "head_dim")),
+        "wk": mk((d, hkv, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": mk((d, hkv, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": mk((hq, dh, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = mk((hq, dh), ("heads", "head_dim"), init="zeros")
+        p["bk"] = mk((hkv, dh), ("kv_heads", "head_dim"), init="zeros")
+        p["bv"] = mk((hkv, dh), ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = norm_params(mk, "rmsnorm", dh)
+        p["k_norm"] = norm_params(mk, "rmsnorm", dh)
+    return p
+
+
+def qkv_project(params, cfg: ModelConfig, x: jax.Array, positions: jax.Array):
+    """x (B,S,d) -> q (B,S,Hq,D), k/v (B,S,Hkv,D) with rope applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = apply_norm(params["q_norm"], "rmsnorm", q)
+        k = apply_norm(params["k_norm"], "rmsnorm", k)
+    if cfg.rope:
+        # rope over (B,S,H,D): move head before seq for broadcasting
+        q = apply_rope(q.swapaxes(1, 2), positions[:, None, :], cfg.rope_theta).swapaxes(1, 2)
+        k = apply_rope(k.swapaxes(1, 2), positions[:, None, :], cfg.rope_theta).swapaxes(1, 2)
+    q = constrain(q, ("batch", "seq", "heads", "head_dim"))
+    k = constrain(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = constrain(v, ("batch", "seq", "kv_heads", "head_dim"))
+    return q, k, v
+
+
+def out_project(params, x: jax.Array) -> jax.Array:
+    """(B,S,Hq,D) -> (B,S,d)."""
+    out = jnp.einsum("bshk,hkd->bsd", x, params["wo"].astype(x.dtype))
+    return constrain(out, ("batch", "seq", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (global): online softmax over KV blocks
+# ---------------------------------------------------------------------------
+def _gqa_scores(q, k, scale, softcap_val):
+    """q (B,Sq,Hkv,G,D) x k (B,Bk,Hkv,D) -> scores (B,Hkv,G,Sq,Bk), fp32."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k).astype(jnp.float32) * scale
+    if softcap_val:
+        s = softcap_val * jnp.tanh(s / softcap_val)
+    return s
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    softcap_val: float = 0.0,
+                    block_k: int = 1024,
+                    block_q: int = 1024,
+                    q_positions: Optional[jax.Array] = None,
+                    k_positions: Optional[jax.Array] = None) -> jax.Array:
+    """Online-softmax attention, O(block_q*block_k) live score memory.
+
+    q (B,Sq,Hq,D), k/v (B,Sk,Hkv,D) -> (B,Sq,Hq,D).
+
+    Long queries are processed in ``block_q`` tiles via ``lax.map``; each
+    tile runs the online-softmax scan over KV tiles.  (Causal tiles scan
+    the full KV range with masking — the rectangle-vs-triangle FLOP
+    overcount is noted in EXPERIMENTS.md §Roofline.)
+    """
+    B, Sq, Hq, D = q.shape
+    if Sq > block_q:
+        nqb = (Sq + block_q - 1) // block_q
+        pad = nqb * block_q - Sq
+        if q_positions is None:
+            q_positions = jnp.arange(Sq, dtype=jnp.int32)[None, :].repeat(B, 0)
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # padded tail positions masked out via position < 0
+        qpos = jnp.pad(q_positions, ((0, 0), (0, pad)), constant_values=-1)
+        qs = qp.reshape(B, nqb, block_q, Hq, D).transpose(1, 0, 2, 3, 4)
+        qposs = qpos.reshape(B, nqb, block_q).transpose(1, 0, 2)
+
+        def one(args):
+            qb, qpb = args
+            return flash_attention(
+                qb, k, v, causal=causal, softcap_val=softcap_val,
+                block_k=block_k, block_q=block_q,
+                q_positions=qpb, k_positions=k_positions)
+
+        outs = jax.lax.map(one, (qs, qposs))                    # (nqb,B,Bq,Hq,D)
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nqb * block_q, Hq, D)
+        return out[:, :Sq]
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(D)
+    qr = q.reshape(B, Sq, Hkv, G, D)
+
+    block_k = min(block_k, Sk)
+    nkb = (Sk + block_k - 1) // block_k
+    pad = nkb * block_k - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if q_positions is None:
+        q_positions = jnp.arange(Sq)[None, :].repeat(B, 0)
+    if k_positions is None:
+        k_positions = jnp.arange(Sk)[None, :].repeat(B, 0)
+    k_positions = jnp.pad(k_positions, ((0, 0), (0, pad)), constant_values=-1)
+
+    ks = k.reshape(B, nkb, block_k, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nkb, block_k, Hkv, D).transpose(1, 0, 2, 3, 4)
+    kps = k_positions.reshape(B, nkb, block_k).transpose(1, 0, 2)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kb, vb, kp = blk
+        s = _gqa_scores(qr, kb, scale, softcap_val)            # (B,Hkv,G,Sq,Bk)
+        mask = (kp[:, None, None, None, :] >= 0)
+        if causal:
+            mask = mask & (kp[:, None, None, None, :]
+                           <= q_positions[:, None, None, :, None])
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask, p, 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb).astype(jnp.float32)
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, kps))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]               # (B,Hkv,G,Sq,D)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block-Q attention for TRAINING: lax.map over checkpointed Q-blocks.
+#
+# Differentiating the online-softmax scan stores per-step carries (O(S^2))
+# — catastrophic.  Here each Q block computes a full softmax row against
+# all of K in one shot inside jax.checkpoint, so the backward pass
+# rematerializes one block's scores at a time: live memory
+# O(B*H*block_q*Sk), saved residuals O(inputs) only.
+# ---------------------------------------------------------------------------
+def blockq_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     causal: bool = True,
+                     softcap_val: float = 0.0,
+                     block_q: int = 512) -> jax.Array:
+    """Training-path attention.  q (B,Sq,Hq,D), k/v (B,Sk,Hkv,D)."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(D)
+    block_q = min(block_q, Sq)
+    nqb = (Sq + block_q - 1) // block_q
+    pad = nqb * block_q - Sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qr = q.reshape(B, nqb, block_q, Hkv, G, D)
+    k_pos = jnp.arange(Sk)
+
+    @jax.checkpoint
+    def per_block(qb, q_pos, k, v):
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, k).astype(jnp.float32) * scale
+        if softcap_val:
+            s = softcap_val * jnp.tanh(s / softcap_val)
+        if causal:
+            mask = k_pos[None, :] <= q_pos[:, None]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), v)
+
+    def one(i):
+        q_pos = i * block_q + jnp.arange(block_q)
+        return per_block(qr[:, i], q_pos, k, v)                 # (B,Hkv,G,bq,D)
+
+    outs = jax.lax.map(one, jnp.arange(nqb))                    # (nqb,B,Hkv,G,bq,D)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, nqb * block_q, Hq, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Local (sliding-window) attention: scan over Q blocks
+# ---------------------------------------------------------------------------
+def local_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    window: int,
+                    causal: bool = True,
+                    softcap_val: float = 0.0,
+                    block_q: int = 512) -> jax.Array:
+    """Sliding-window attention, FLOPs O(S * (window + block_q)).
+
+    Each Q block of length Bq attends to the KV slice of length W+Bq ending
+    at the block's last position (clamped at 0); the band mask enforces
+    ``0 <= q_pos - k_pos < window`` (and causality).
+    """
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(D)
+    block_q = min(block_q, S)
+    nqb = (S + block_q - 1) // block_q
+    pad = nqb * block_q - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    span = window + block_q                                     # KV slice length
+    # pad KV at the FRONT by span (front slots masked via position < 0) and
+    # at the END by the q padding so no dynamic_slice ever clamps (clamping
+    # would silently misalign k positions).
+    kp = jnp.pad(k, ((0, 0), (span, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (span, pad), (0, 0), (0, 0)))
+    S_orig = S
+
+    qr = q.reshape(B, nqb, block_q, Hkv, G, D)
+
+    @jax.checkpoint
+    def per_block(i):
+        qb = qr[:, i]                                           # (B,Bq,Hkv,G,D)
+        q_pos = i * block_q + jnp.arange(block_q)               # (Bq,)
+        end = i * block_q + block_q                             # kv slice end (orig idx)
+        start = end - span + span                               # padded-idx start == end
+        kb = jax.lax.dynamic_slice_in_dim(kp, start, span, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(vp, start, span, axis=1)
+        k_pos = end - span + jnp.arange(span)                   # (span,) absolute, <0 invalid
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb).astype(jnp.float32) * scale
+        if softcap_val:
+            s = softcap_val * jnp.tanh(s / softcap_val)
+        delta = q_pos[:, None] - k_pos[None, :]                 # (Bq, span)
+        mask = (k_pos[None, :] >= 0) & (k_pos[None, :] < S_orig) \
+            & (delta < window)
+        if causal:
+            mask = mask & (delta >= 0)
+        else:
+            mask = mask & (delta > -window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb)
+        return o                                                # (B,Hkv,G,Bq,D)
+
+    outs = jax.lax.map(per_block, jnp.arange(nqb))              # (nqb,B,Hkv,G,Bq,D)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, nqb * block_q, Hkv, G, D)
+    out = out[:, :S].reshape(B, S, Hq, D)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (global or ring-buffer for local layers)
+# ---------------------------------------------------------------------------
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, L, Hkv, D)
+    v: jax.Array          # (B, L, Hkv, D)
+    pos: jax.Array        # (B, L) absolute position of each slot, -1 = empty
+
+
+def kv_cache_axes():
+    return KVCache(
+        k=("batch", "cache_seq", "kv_heads", "head_dim"),
+        v=("batch", "cache_seq", "kv_heads", "head_dim"),
+        pos=("batch", "cache_seq"),
+    )
+
+
+def init_kv_cache(batch: int, length: int, hkv: int, dh: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, length, hkv, dh), dtype),
+        v=jnp.zeros((batch, length, hkv, dh), dtype),
+        pos=jnp.full((batch, length), -1, jnp.int32),
+    )
+
+
+def cache_length(cfg: ModelConfig, kind: str, max_len: int) -> int:
+    """Ring length: full context for global layers, window for local."""
+    if kind == "local":
+        return min(cfg.window, max_len)
+    return max_len
+
+
+def fill_cache_from_prefill(cache: KVCache, k: jax.Array, v: jax.Array) -> KVCache:
+    """Write a full prefill's K/V (B,S,Hkv,D) into a length-L ring cache."""
+    B, S = k.shape[0], k.shape[1]
+    L = cache.k.shape[1]
+    take = min(S, L)
+    k_t = k[:, S - take:]
+    v_t = v[:, S - take:]
+    pos_t = jnp.arange(S - take, S, dtype=jnp.int32)
+    slots = pos_t % L                                           # (take,)
+    new_k = cache.k.at[:, slots].set(k_t.astype(cache.k.dtype))
+    new_v = cache.v.at[:, slots].set(v_t.astype(cache.v.dtype))
+    new_pos = cache.pos.at[:, slots].set(pos_t[None, :].repeat(B, 0))
+    return KVCache(new_k, new_v, new_pos)
+
+
+def decode_attention(params, cfg: ModelConfig, x: jax.Array, cache: KVCache,
+                     position: jax.Array, *, window: Optional[int] = None):
+    """One decode step.  x (B,1,d); position scalar int32 (current index).
+
+    Returns (out (B,1,d), new_cache).
+    """
+    B = x.shape[0]
+    dh = cfg.resolved_head_dim()
+    positions = jnp.full((B, 1), position, jnp.int32)
+    q, k_new, v_new = qkv_project(params, cfg, x, positions)
+    L = cache.k.shape[1]
+    slot = position % L
+    new_k = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
+    new_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache.pos, jnp.full((B, 1), position, jnp.int32), slot, axis=1)
+    new_cache = KVCache(new_k, new_v, new_pos)
+
+    Hq, Hkv = cfg.num_heads, cfg.num_kv_heads
+    G = Hq // Hkv
+    qr = q.reshape(B, 1, Hkv, G, dh)
+    scale = 1.0 / np.sqrt(dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr,
+                   new_cache.k.astype(q.dtype)).astype(jnp.float32) * scale
+    if cfg.attn_softcap:
+        s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
+    kp = new_cache.pos[:, None, None, None, :]                  # (B,1,1,1,L)
+    mask = (kp >= 0) & (kp <= position)
+    if window is not None:
+        mask = mask & (position - kp < window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(q.dtype),
+                   new_cache.v.astype(q.dtype))
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, 1, Hq, dh)
+    return out_project(params, o), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence layer entry point (train / prefill)
+# ---------------------------------------------------------------------------
+def attention_block(params, cfg: ModelConfig, x: jax.Array, *, kind: str,
+                    positions: Optional[jax.Array] = None,
+                    return_kv: bool = False):
+    """x (B,S,d) -> (B,S,d); kind in {global, local}.
+
+    Global attention picks its execution path by use:
+      * training / encoder forward (return_kv=False) -> blockq_attention
+        (checkpointed Q blocks: autodiff-memory-safe);
+      * prefill (return_kv=True, no grad) -> flash_attention (online-softmax
+        scan: O(block) live memory).
+    """
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    q, k, v = qkv_project(params, cfg, x, positions)
+    if kind == "local":
+        o = local_attention(q, k, v, window=cfg.window, causal=cfg.causal,
+                            softcap_val=cfg.attn_softcap)
+    elif return_kv:
+        o = flash_attention(q, k, v, causal=cfg.causal,
+                            softcap_val=cfg.attn_softcap)
+    else:
+        o = blockq_attention(q, k, v, causal=cfg.causal,
+                             softcap_val=cfg.attn_softcap)
+    out = out_project(params, o)
+    if return_kv:
+        return out, (k, v)
+    return out

@@ -1,0 +1,133 @@
+"""Shared layers: norms, rotary embeddings, embedding tables, softcap."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import ParamFactory, constrain
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def norm_params(mk: ParamFactory, kind: str, dim: int):
+    if kind == "rmsnorm":
+        return {"scale": mk((dim,), ("embed",), init="ones")}
+    if kind == "layernorm":
+        return {"scale": mk((dim,), ("embed",), init="ones"),
+                "bias": mk((dim,), ("embed",), init="zeros")}
+    if kind == "nonparam_ln":      # OLMo: no learnable affine
+        return {}
+    raise ValueError(f"unknown norm '{kind}'")
+
+
+def apply_norm(params, kind: str, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + eps)
+        # gemma-style (1 + scale) is not used; plain scale
+        y = y * params["scale"].astype(jnp.float32)
+    elif kind in ("layernorm", "nonparam_ln"):
+        mean = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+        if kind == "layernorm":
+            y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:
+        raise ValueError(kind)
+    return y.astype(dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, D) with positions (..., S) or (S,)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta))          # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, dim: int, offset: int = 0) -> jax.Array:
+    """Fixed sinusoidal table (used as the HuBERT conv-pos-emb stand-in)."""
+    pos = np.arange(offset, offset + seq_len, dtype=np.float32)[:, None]
+    i = np.arange(dim // 2, dtype=np.float32)[None, :]
+    angle = pos / np.power(10000.0, 2 * i / dim)
+    table = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(table)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def embed_params(mk: ParamFactory, vocab: int, d_model: int, tie: bool,
+                 padded_vocab: Optional[int] = None):
+    """``padded_vocab`` (>= vocab, multiple of the model-axis size) lets the
+    embedding shard on the model axis even for odd vocab sizes; the padded
+    logit columns are masked in ``unembed``."""
+    pv = padded_vocab or vocab
+    p = {"embedding": mk((pv, d_model), ("vocab", "embed"),
+                         init="embed", scale=0.02)}
+    if not tie:
+        p["unembed"] = mk((d_model, pv), ("embed", "vocab"),
+                          init="embed", scale=0.02)
+    return p
+
+
+def embed(params, tokens: jax.Array, *, scale: bool, d_model: int,
+          dtype) -> jax.Array:
+    x = jnp.take(params["embedding"], tokens, axis=0).astype(dtype)
+    if scale:
+        x = x * jnp.asarray(np.sqrt(d_model), dtype)
+    return constrain(x, ("batch", "seq", "embed"))
+
+
+def unembed(params, x: jax.Array, *, tie: bool, cap: float = 0.0,
+            real_vocab: Optional[int] = None) -> jax.Array:
+    if tie:
+        logits = jnp.einsum("...d,vd->...v", x, params["embedding"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, params["unembed"].astype(x.dtype))
+    logits = softcap(logits.astype(jnp.float32), cap)
+    pv = logits.shape[-1]
+    if real_vocab is not None and real_vocab < pv:
+        # mask vocab-padding columns so softmax/argmax never select them
+        col = jnp.arange(pv)
+        logits = jnp.where(col[None, :] < real_vocab
+                           if logits.ndim == 2 else
+                           col[None, None, :] < real_vocab,
+                           logits, -1e30)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token cross-entropy in fp32. logits (..., V), targets (...)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

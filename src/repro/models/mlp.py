@@ -1,0 +1,35 @@
+"""Gated MLP (SwiGLU / GEGLU) with tensor-parallel ffn sharding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParamFactory, constrain
+
+
+def mlp_params(mk: ParamFactory, d_model: int, d_ff: int):
+    return {
+        "w_gate": mk((d_model, d_ff), ("embed", "ffn")),
+        "w_up": mk((d_model, d_ff), ("embed", "ffn")),
+        "w_down": mk((d_ff, d_model), ("ffn", "embed")),
+    }
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(f"unknown act '{kind}'")
+
+
+def mlp_block(params, cfg_or_act, x: jax.Array) -> jax.Array:
+    """x (B,S,d) -> (B,S,d).  Accepts a ModelConfig or an act-name string."""
+    act = cfg_or_act.act if isinstance(cfg_or_act, ModelConfig) else cfg_or_act
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(x.dtype))
+    h = _act(g, act) * u
+    h = constrain(h, ("batch", "seq", "ffn"))
+    out = jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(x.dtype))
+    return constrain(out, ("batch", "seq", "embed"))

@@ -1,0 +1,122 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) [arXiv:2402.19427].
+
+Block = (x-branch: linear -> causal conv -> RG-LRU) gated by
+(y-branch: linear -> GELU), then output projection.
+
+RG-LRU:  r_t = sigma(W_a u_t + b_a)         recurrence gate
+         i_t = sigma(W_x u_t + b_x)         input gate
+         a_t = exp(-c * softplus(Lambda) * r_t)
+         h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over the sequence
+(TPU-friendly log-depth scan); decode is the O(1) recurrent step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParamFactory, constrain
+
+
+def rglru_params(mk: ParamFactory, cfg: ModelConfig):
+    g = cfg.rglru
+    d = cfg.d_model
+    w = g.lru_width or d
+    return {
+        "w_x": mk((d, w), ("embed", "inner")),
+        "w_y": mk((d, w), ("embed", "inner")),
+        "conv_w": mk((g.conv_width, w), ("conv", "inner")),
+        "conv_b": mk((w,), ("inner",), init="zeros"),
+        "wa": mk((w, w), ("inner", "inner")),
+        "ba": mk((w,), ("inner",), init="zeros"),
+        "wi": mk((w, w), ("inner", "inner")),
+        "bi": mk((w,), ("inner",), init="zeros"),
+        "lam": mk((w,), ("inner",), init="uniform", scale=1.0),
+        "w_out": mk((w, d), ("inner", "embed")),
+    }
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array          # (B, W) recurrent state
+    conv: jax.Array       # (B, K-1, W) conv tail
+
+
+def rglru_state_axes():
+    return RGLRUState(h=("batch", "inner"), conv=("batch", None, "inner"))
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> RGLRUState:
+    g = cfg.rglru
+    w = g.lru_width or cfg.d_model
+    return RGLRUState(h=jnp.zeros((batch, w), dtype),
+                      conv=jnp.zeros((batch, g.conv_width - 1, w), dtype))
+
+
+def _conv(params, cfg: ModelConfig, u: jax.Array, tail=None):
+    K = cfg.rglru.conv_width
+    w = params["conv_w"].astype(u.dtype)
+    if tail is None:
+        pad = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+    else:
+        pad = tail.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)
+    out = sum(full[:, i:i + u.shape[1]] * w[i] for i in range(K))
+    new_tail = full[:, -(K - 1):] if K > 1 else pad[:, :0]
+    return out + params["conv_b"].astype(u.dtype), new_tail
+
+
+def _gates(params, cfg: ModelConfig, u: jax.Array):
+    """u (B,S,W) -> (a (log-space fp32), gated input b) per step."""
+    c = cfg.rglru.c_constant
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, params["wa"].astype(u.dtype))
+                       + params["ba"].astype(u.dtype)).astype(jnp.float32)
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, params["wi"].astype(u.dtype))
+                       + params["bi"].astype(u.dtype)).astype(jnp.float32)
+    log_a = -c * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u.astype(jnp.float32))
+    return a, b
+
+
+def rglru_block(params, cfg: ModelConfig, x: jax.Array, *,
+                return_state: bool = False):
+    """Full-sequence Griffin recurrent block.  x (B,S,d) -> (B,S,d)."""
+    u = jnp.einsum("bsd,dw->bsw", x, params["w_x"].astype(x.dtype))
+    y_gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, params["w_y"].astype(x.dtype)))
+    u, tail = _conv(params, cfg, u)
+    u = constrain(u, ("batch", "seq", "inner"))
+    a, b = _gates(params, cfg, u)
+
+    # linear recurrence h_t = a_t h_{t-1} + b_t via associative scan over S
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+    a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", h * y_gate,
+                     params["w_out"].astype(x.dtype))
+    out = constrain(out, ("batch", "seq", "embed"))
+    if return_state:
+        return out, RGLRUState(h=h[:, -1].astype(jnp.float32),
+                               conv=tail.astype(jnp.float32))
+    return out
+
+
+def rglru_decode_step(params, cfg: ModelConfig, x: jax.Array,
+                      state: RGLRUState):
+    """One-token step.  x (B,1,d) -> (out (B,1,d), new state)."""
+    u = jnp.einsum("bsd,dw->bsw", x, params["w_x"].astype(x.dtype))
+    y_gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, params["w_y"].astype(x.dtype)))
+    u, new_tail = _conv(params, cfg, u, tail=state.conv)
+    a, b = _gates(params, cfg, u)                               # (B,1,W) fp32
+    h = a[:, 0] * state.h + b[:, 0]
+    out = jnp.einsum("bsw,wd->bsd", (h[:, None].astype(x.dtype) * y_gate),
+                     params["w_out"].astype(x.dtype))
+    return out, RGLRUState(h=h, conv=new_tail.astype(jnp.float32))

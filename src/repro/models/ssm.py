@@ -1,0 +1,242 @@
+"""Mamba-2 SSD block [arXiv:2405.21060] — chunked dual form.
+
+TPU adaptation (DESIGN.md §2/§6): the SSD *dual form* is used for
+training/prefill because it turns the selective-scan into chunk-local
+matmuls (MXU-friendly) plus a tiny O(S/Q) recurrence over chunk states —
+the GPU paper's warp-level scan has no TPU analogue and is not needed.
+Decode is the O(1) recurrent form.
+
+Shapes: x (B,S,H,P) heads/headdim, B/C (B,S,G,N) groups/state,
+dt (B,S,H), A (H,) negative decay.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParamFactory, constrain
+from repro.models.layers import apply_norm, norm_params
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+def ssm_params(mk: ParamFactory, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    H = s.num_heads(d)
+    G, N = s.ngroups, s.state_dim
+    conv_dim = di + 2 * G * N
+    return {
+        "w_in_x": mk((d, di), ("embed", "inner")),
+        "w_in_z": mk((d, di), ("embed", "inner")),
+        "w_in_B": mk((d, G * N), ("embed", "state")),
+        "w_in_C": mk((d, G * N), ("embed", "state")),
+        "w_in_dt": mk((d, H), ("embed", "heads")),
+        "dt_bias": mk((H,), ("heads",), init="zeros"),
+        "A_log": mk((H,), ("heads",), init="uniform", scale=1.0),
+        "D": mk((H,), ("heads",), init="ones"),
+        "conv_w": mk((s.conv_width, conv_dim), ("conv", "inner")),
+        "conv_b": mk((conv_dim,), ("inner",), init="zeros"),
+        "out_norm": norm_params(mk, "rmsnorm", di),
+        "w_out": mk((di, d), ("inner", "embed")),
+    }
+
+
+class SSMState(NamedTuple):
+    h: jax.Array          # (B, H, P, N) recurrent state
+    conv: jax.Array       # (B, conv_width-1, conv_dim) conv tail
+
+
+def ssm_state_axes():
+    return SSMState(h=("batch", "heads", None, "state"),
+                    conv=("batch", None, "inner"))
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SSMState:
+    s = cfg.ssm
+    d = cfg.d_model
+    H, P, N = s.num_heads(d), s.head_dim, s.state_dim
+    conv_dim = s.d_inner(d) + 2 * s.ngroups * N
+    return SSMState(
+        h=jnp.zeros((batch, H, P, N), dtype),
+        conv=jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Projections + causal conv shared by both paths
+# ---------------------------------------------------------------------------
+def _project(params, cfg: ModelConfig, x: jax.Array):
+    """x (B,S,d) -> z, xBC (pre-conv), dt."""
+    z = jnp.einsum("bsd,de->bse", x, params["w_in_z"].astype(x.dtype))
+    xb = jnp.einsum("bsd,de->bse", x, params["w_in_x"].astype(x.dtype))
+    Bp = jnp.einsum("bsd,dn->bsn", x, params["w_in_B"].astype(x.dtype))
+    Cp = jnp.einsum("bsd,dn->bsn", x, params["w_in_C"].astype(x.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x, params["w_in_dt"].astype(x.dtype))
+    xBC = jnp.concatenate([xb, Bp, Cp], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(params, cfg: ModelConfig, xBC: jax.Array,
+                 tail: jax.Array | None = None):
+    """Depthwise causal conv width K.  xBC (B,S,C); tail (B,K-1,C) or None."""
+    K = cfg.ssm.conv_width
+    w = params["conv_w"].astype(xBC.dtype)                      # (K, C)
+    if tail is None:
+        pad = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = tail.astype(xBC.dtype)
+    full = jnp.concatenate([pad, xBC], axis=1)                  # (B, S+K-1, C)
+    out = sum(full[:, i:i + xBC.shape[1]] * w[i] for i in range(K))
+    out = out + params["conv_b"].astype(xBC.dtype)
+    new_tail = full[:, -( K - 1):] if K > 1 else pad[:, :0]
+    return jax.nn.silu(out), new_tail
+
+
+def _split_xbc(cfg: ModelConfig, xBC: jax.Array):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    GN = s.ngroups * s.state_dim
+    xh = xBC[..., :di]
+    Bm = xBC[..., di:di + GN]
+    Cm = xBC[..., di + GN:]
+    return xh, Bm, Cm
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked dual form (train / prefill)
+# ---------------------------------------------------------------------------
+def _segsum(a: jax.Array) -> jax.Array:
+    """a (..., Q) -> (..., Q, Q) with out[i,j] = sum_{k=j+1..i} a_k (i>=j)."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]                   # sum_{j+1..i}
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, D, chunk: int):
+    """SSD dual form.  xh (B,S,H,P); dt (B,S,H) post-softplus; A (H,) < 0;
+    Bm/Cm (B,S,G,N); D (H,).  Returns y (B,S,H,P) and final state (B,H,P,N).
+    """
+    Bsz, S0, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, S0)
+    # pad S to a chunk multiple; padded steps have dt=0 -> decay 1, no input,
+    # so they neither change the state nor the (discarded) outputs.
+    pad = (-S0) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S = S0 + pad
+    nc = S // Q
+    rep = H // G
+
+    # expand groups to heads
+    Bh = jnp.repeat(Bm, rep, axis=2)                            # (B,S,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    # chunked views
+    xc = xh.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = Bh.reshape(Bsz, nc, Q, H, N)
+    Cc = Ch.reshape(Bsz, nc, Q, H, N)
+
+    dA = (dtc * A[None, None, None, :]).astype(jnp.float32)     # (B,nc,Q,H) log decay
+    dA = dA.transpose(0, 1, 3, 2)                               # (B,nc,H,Q)
+    dA_cs = jnp.cumsum(dA, axis=-1)                             # within-chunk cumsum
+
+    # 1. intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(dA))                                    # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Cc, Bc).astype(jnp.float32)
+    M = scores * L
+    xdt = xc * dtc[..., None]                                   # dt-weighted input
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", M.astype(xh.dtype), xdt)
+
+    # 2. per-chunk output states: decay from position to end of chunk
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)             # (B,nc,H,Q)
+    states = jnp.einsum("bcqhn,bchq,bcqhp->bchpn",
+                        Bc, decay_states.astype(xh.dtype), xdt)  # (B,nc,H,P,N)
+
+    # 3. inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(dA_cs[..., -1])                       # (B,nc,H) total decay
+    def body(h, inp):
+        st, dec = inp                                           # (B,H,P,N), (B,H)
+        h_new = h * dec[..., None, None].astype(h.dtype) + st
+        return h_new, h                                         # emit PREVIOUS state
+    h0 = jnp.zeros((Bsz, xh.shape[2], P, N), xh.dtype)
+    hT, h_prev = jax.lax.scan(
+        body, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                    # (B,nc,H,P,N) state entering chunk
+
+    # 4. state -> output contribution within each chunk
+    decay_in = jnp.exp(dA_cs)                                   # (B,nc,H,Q) decay from chunk start
+    y_off = jnp.einsum("bcqhn,bchpn,bchq->bcqhp",
+                       Cc, h_prev, decay_in.astype(xh.dtype))
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    y = y + xh * D[None, None, :, None].astype(xh.dtype)
+    return y[:, :S0], hT
+
+
+def ssm_block(params, cfg: ModelConfig, x: jax.Array, *,
+              return_state: bool = False):
+    """Full-sequence Mamba-2 block.  x (B,S,d) -> (B,S,d)."""
+    s = cfg.ssm
+    z, xBC, dt = _project(params, cfg, x)
+    xBC, tail = _causal_conv(params, cfg, xBC)
+    xh, Bm, Cm = _split_xbc(cfg, xBC)
+    Bsz, S = x.shape[0], x.shape[1]
+    H, P = s.num_heads(cfg.d_model), s.head_dim
+    xh = xh.reshape(Bsz, S, H, P)
+    xh = constrain(xh, ("batch", "seq", "heads", None))
+    Bm = Bm.reshape(Bsz, S, s.ngroups, s.state_dim)
+    Cm = Cm.reshape(Bsz, S, s.ngroups, s.state_dim)
+    dt = jax.nn.softplus(dt + params["dt_bias"].astype(dt.dtype))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, hT = ssd_chunked(xh, dt, A, Bm, Cm,
+                        params["D"].astype(x.dtype), s.chunk_size)
+    y = y.reshape(Bsz, S, -1)
+    y = apply_norm(params["out_norm"], "rmsnorm", y * jax.nn.silu(z))
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(x.dtype))
+    out = constrain(out, ("batch", "seq", "embed"))
+    if return_state:
+        return out, SSMState(h=hT.astype(jnp.float32), conv=tail.astype(jnp.float32))
+    return out
+
+
+def ssm_decode_step(params, cfg: ModelConfig, x: jax.Array, state: SSMState):
+    """One-token recurrent step.  x (B,1,d) -> (out (B,1,d), new state)."""
+    s = cfg.ssm
+    z, xBC, dt = _project(params, cfg, x)                       # (B,1,...)
+    xBC, new_tail = _causal_conv(params, cfg, xBC, tail=state.conv)
+    xh, Bm, Cm = _split_xbc(cfg, xBC)
+    Bsz = x.shape[0]
+    H, P, N, G = (s.num_heads(cfg.d_model), s.head_dim, s.state_dim, s.ngroups)
+    xh = xh.reshape(Bsz, H, P)
+    Bm = Bm.reshape(Bsz, G, N)
+    Cm = Cm.reshape(Bsz, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)                            # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    dt1 = jax.nn.softplus(dt[:, 0] + params["dt_bias"].astype(dt.dtype))  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))           # (H,)
+    dA = jnp.exp(dt1.astype(jnp.float32) * A[None, :])          # (B,H)
+    h = state.h * dA[..., None, None]
+    h = h + jnp.einsum("bhp,bhn->bhpn", (xh * dt1[..., None]).astype(h.dtype),
+                       Bh.astype(h.dtype))
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ch.astype(h.dtype))
+    y = y + xh.astype(h.dtype) * params["D"].astype(h.dtype)[None, :, None]
+    y = y.reshape(Bsz, 1, H * P).astype(x.dtype)
+    y = apply_norm(params["out_norm"], "rmsnorm", y * jax.nn.silu(z))
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(x.dtype))
+    return out, SSMState(h=h, conv=new_tail.astype(jnp.float32))

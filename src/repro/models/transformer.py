@@ -1,0 +1,520 @@
+"""Generic architecture stack for all assigned families.
+
+Layers are grouped into repetitions of ``cfg.layer_pattern`` and scanned
+with ``jax.lax.scan`` (stacked params, small HLO even for 48-layer models);
+``first_k_dense`` prefix layers and pattern remainders are unrolled.
+
+Public API:
+  init(cfg, key) / param_specs(cfg)
+  forward(params, cfg, inputs, ...)            train/encoder forward
+  lm_loss(params, cfg, batch)                  chunked-vocab LM loss
+  prefill(params, cfg, inputs, max_len)        -> (last_logits, cache)
+  decode_step(params, cfg, token_inputs, cache, position)
+  init_cache(cfg, batch, max_len) / cache_specs(cfg, batch, max_len)
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (
+    ATTN_GLOBAL, ATTN_LOCAL, RECURRENT, SSM, ModelConfig,
+)
+from repro.core.gating import contribution_gate, gate_params
+from repro.distributed.sharding import ParamFactory, constrain
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    apply_norm, cross_entropy, embed, embed_params, norm_params,
+    sinusoidal_positions, softcap, unembed,
+)
+
+LayerKind = str
+
+
+def _scan_unroll() -> bool:
+    """Fully unroll layer/loss scans (dry-run accounting mode).
+
+    XLA's cost_analysis counts a while-loop body ONCE regardless of trip
+    count, so the dry-run sets REPRO_SCAN_UNROLL=1 to unroll the scans and
+    make HLO FLOPs / collective-bytes reflect the whole program.
+    """
+    return os.environ.get("REPRO_SCAN_UNROLL", "0") == "1"
+
+
+# ---------------------------------------------------------------------------
+# Stack structure helpers
+# ---------------------------------------------------------------------------
+def stack_plan(cfg: ModelConfig):
+    """Return (prefix_kinds, pattern, n_rep, suffix_kinds)."""
+    kinds = cfg.layer_kinds()
+    k = cfg.first_k_dense
+    if k:
+        assert len(set(cfg.layer_pattern)) == 1, \
+            "first_k_dense requires a uniform layer pattern"
+    prefix = kinds[:k]
+    rest = kinds[k:]
+    pat = cfg.layer_pattern
+    n_rep = len(rest) // len(pat)
+    suffix = rest[n_rep * len(pat):]
+    return prefix, pat, n_rep, suffix
+
+
+def _ffn_kind(cfg: ModelConfig, kind: LayerKind, *, in_prefix: bool) -> str:
+    if kind == SSM:
+        return "none"                # mamba block has no separate FFN
+    if cfg.moe is not None and not in_prefix:
+        return "moe"
+    return "dense" if cfg.d_ff else "none"
+
+
+def _layer_params(mk: ParamFactory, cfg: ModelConfig, kind: LayerKind,
+                  ffn: str):
+    d = cfg.d_model
+    p: Dict[str, Any] = {"norm1": norm_params(mk, cfg.norm, d)}
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        p["attn"] = attn_mod.attn_params(mk, cfg)
+    elif kind == RECURRENT:
+        p["rec"] = rglru_mod.rglru_params(mk, cfg)
+    elif kind == SSM:
+        p["ssm"] = ssm_mod.ssm_params(mk, cfg)
+    else:
+        raise ValueError(kind)
+    if cfg.post_norms:
+        p["post_norm1"] = norm_params(mk, cfg.norm, d)
+    if ffn != "none":
+        p["norm2"] = norm_params(mk, cfg.norm, d)
+        if ffn == "dense":
+            p["ffn"] = mlp_mod.mlp_params(mk, d, cfg.d_ff)
+        else:
+            p["ffn"] = moe_mod.moe_params(mk, cfg)
+        if cfg.post_norms:
+            p["post_norm2"] = norm_params(mk, cfg.norm, d)
+    return p
+
+
+def _block_params(mk: ParamFactory, cfg: ModelConfig, pattern):
+    return {str(i): _layer_params(mk, cfg, kind,
+                                  _ffn_kind(cfg, kind, in_prefix=False))
+            for i, kind in enumerate(pattern)}
+
+
+def model_params(cfg: ModelConfig, mk: ParamFactory):
+    prefix, pat, n_rep, suffix = stack_plan(cfg)
+    p: Dict[str, Any] = {
+        "embed": embed_params(mk, cfg.vocab_size, cfg.d_model,
+                              cfg.tie_embeddings,
+                              padded_vocab=cfg.padded_vocab()),
+        "final_norm": norm_params(mk, cfg.norm, cfg.d_model),
+    }
+    if cfg.contribution_gate:
+        # generalized Pix-Con: learned per-token contribution weighting
+        # applied to the embedded stream (DESIGN.md §5)
+        p["gate"] = gate_params(mk, cfg.d_model)
+    if cfg.frontend == "audio_stub":
+        p["frontend"] = {
+            "proj": mk((cfg.frontend_dim, cfg.d_model), (None, "embed")),
+            "proj_b": mk((cfg.d_model,), ("embed",), init="zeros"),
+        }
+    elif cfg.frontend == "vision_stub":
+        p["frontend"] = {
+            "w1": mk((cfg.frontend_dim, cfg.d_model), (None, "embed")),
+            "b1": mk((cfg.d_model,), ("embed",), init="zeros"),
+            "w2": mk((cfg.d_model, cfg.d_model), ("embed", None)),
+            "b2": mk((cfg.d_model,), ("embed",), init="zeros"),
+        }
+    if prefix:
+        p["prefix"] = tuple(
+            _layer_params(mk, cfg, kind, _ffn_kind(cfg, kind, in_prefix=True))
+            for kind in prefix)
+    if n_rep:
+        if mk.mode == "spec":
+            block = _block_params(mk, cfg, pat)
+            p["blocks"] = jax.tree.map(
+                lambda ax: (None,) + ax, block,
+                is_leaf=lambda x: isinstance(x, tuple) and all(
+                    isinstance(e, (str, type(None))) for e in x))
+        else:
+            reps = [_block_params(mk, cfg, pat) for _ in range(n_rep)]
+            p["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+    if suffix:
+        p["suffix"] = tuple(
+            _layer_params(mk, cfg, kind, _ffn_kind(cfg, kind, in_prefix=False))
+            for kind in suffix)
+    return p
+
+
+def init(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32):
+    return model_params(cfg, ParamFactory(key, mode="init", dtype=dtype))
+
+
+def param_specs(cfg: ModelConfig):
+    return model_params(cfg, ParamFactory(mode="spec"))
+
+
+# ---------------------------------------------------------------------------
+# Input embedding (with frontend stubs)
+# ---------------------------------------------------------------------------
+def embed_inputs(params, cfg: ModelConfig, inputs: Dict[str, jax.Array],
+                 dtype=jnp.bfloat16) -> jax.Array:
+    if cfg.frontend == "audio_stub":
+        frames = inputs["frames"].astype(dtype)                  # (B,S,Fd)
+        x = jnp.einsum("bsf,fd->bsd", frames,
+                       params["frontend"]["proj"].astype(dtype))
+        x = x + params["frontend"]["proj_b"].astype(dtype)
+        # HuBERT conv-pos-emb stand-in: fixed sinusoidal table
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(dtype)[None]
+        return constrain(x, ("batch", "seq", "embed"))
+    if cfg.frontend == "vision_stub" and "patches" not in inputs:
+        # decode steps carry tokens only (image prefix lives in the cache)
+        return embed(params["embed"], inputs["tokens"],
+                     scale=cfg.embed_scale, d_model=cfg.d_model, dtype=dtype)
+    if cfg.frontend == "vision_stub":
+        f = params["frontend"]
+        patches = inputs["patches"].astype(dtype)                # (B,P,Fd)
+        h = jax.nn.gelu(jnp.einsum("bpf,fd->bpd", patches,
+                                   f["w1"].astype(dtype)) + f["b1"].astype(dtype))
+        img = jnp.einsum("bpd,de->bpe", h, f["w2"].astype(dtype)) + f["b2"].astype(dtype)
+        txt = embed(params["embed"], inputs["tokens"],
+                    scale=cfg.embed_scale, d_model=cfg.d_model, dtype=dtype)
+        return constrain(jnp.concatenate([img, txt], axis=1),
+                         ("batch", "seq", "embed"))
+    return embed(params["embed"], inputs["tokens"],
+                 scale=cfg.embed_scale, d_model=cfg.d_model, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Layer application (full sequence)
+# ---------------------------------------------------------------------------
+def _apply_ffn(lp, cfg: ModelConfig, x: jax.Array, ffn: str):
+    if ffn == "none":
+        return x, jnp.zeros((), jnp.float32)
+    h = apply_norm(lp["norm2"], cfg.norm, x)
+    if ffn == "dense":
+        out = mlp_mod.mlp_block(lp["ffn"], cfg, h)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        out, aux = moe_mod.moe_block_auto(lp["ffn"], cfg, h)
+    if cfg.post_norms:
+        out = apply_norm(lp["post_norm2"], cfg.norm, out)
+    return x + out, aux
+
+
+def apply_layer(lp, cfg: ModelConfig, x: jax.Array, kind: LayerKind,
+                ffn: str, *, collect_cache: bool = False,
+                max_len: int = 0):
+    """Full-sequence layer.  Returns (x, aux, cache_entry_or_None)."""
+    h = apply_norm(lp["norm1"], cfg.norm, x)
+    cache_entry = None
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        if collect_cache:
+            out, (k, v) = attn_mod.attention_block(
+                lp["attn"], cfg, h, kind=kind, return_kv=True)
+            L = attn_mod.cache_length(cfg, kind, max_len)
+            empty = attn_mod.init_kv_cache(
+                x.shape[0], L, cfg.num_kv_heads, cfg.resolved_head_dim(),
+                dtype=x.dtype)
+            cache_entry = attn_mod.fill_cache_from_prefill(empty, k, v)
+        else:
+            out = attn_mod.attention_block(lp["attn"], cfg, h, kind=kind)
+    elif kind == RECURRENT:
+        if collect_cache:
+            out, cache_entry = rglru_mod.rglru_block(
+                lp["rec"], cfg, h, return_state=True)
+        else:
+            out = rglru_mod.rglru_block(lp["rec"], cfg, h)
+    elif kind == SSM:
+        if collect_cache:
+            out, cache_entry = ssm_mod.ssm_block(
+                lp["ssm"], cfg, h, return_state=True)
+        else:
+            out = ssm_mod.ssm_block(lp["ssm"], cfg, h)
+    else:
+        raise ValueError(kind)
+    if cfg.post_norms:
+        out = apply_norm(lp["post_norm1"], cfg.norm, out)
+    x = x + out
+    x, aux = _apply_ffn(lp, cfg, x, ffn)
+    return x, aux, cache_entry
+
+
+def apply_layer_decode(lp, cfg: ModelConfig, x: jax.Array, kind: LayerKind,
+                       ffn: str, cache_entry, position: jax.Array):
+    """One-token layer step.  Returns (x, new_cache_entry)."""
+    h = apply_norm(lp["norm1"], cfg.norm, x)
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        window = cfg.window if kind == ATTN_LOCAL else None
+        out, new_entry = attn_mod.decode_attention(
+            lp["attn"], cfg, h, cache_entry, position, window=window)
+    elif kind == RECURRENT:
+        out, new_entry = rglru_mod.rglru_decode_step(lp["rec"], cfg, h,
+                                                     cache_entry)
+    elif kind == SSM:
+        out, new_entry = ssm_mod.ssm_decode_step(lp["ssm"], cfg, h,
+                                                 cache_entry)
+    else:
+        raise ValueError(kind)
+    if cfg.post_norms:
+        out = apply_norm(lp["post_norm1"], cfg.norm, out)
+    x = x + out
+    x, _ = _apply_ffn(lp, cfg, x, ffn)
+    return x, new_entry
+
+
+# ---------------------------------------------------------------------------
+# Full stack
+# ---------------------------------------------------------------------------
+def run_stack(params, cfg: ModelConfig, x: jax.Array, *,
+              collect_cache: bool = False, max_len: int = 0,
+              remat: bool = False):
+    """x (B,S,d) -> (x, aux, caches) through prefix + scanned blocks + suffix."""
+    if cfg.contribution_gate:
+        x = contribution_gate(params["gate"], x)
+    prefix, pat, n_rep, suffix = stack_plan(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    caches: Dict[str, Any] = {}
+
+    if prefix:
+        entries = []
+        for lp, kind in zip(params["prefix"], prefix):
+            x, a, c = apply_layer(lp, cfg, x, kind,
+                                  _ffn_kind(cfg, kind, in_prefix=True),
+                                  collect_cache=collect_cache, max_len=max_len)
+            aux = aux + a
+            entries.append(c)
+        if collect_cache:
+            caches["prefix"] = tuple(entries)
+
+    if n_rep:
+        def body(carry, block_p):
+            xx, au = carry
+            entries = []
+            for i, kind in enumerate(pat):
+                xx, a, c = apply_layer(
+                    block_p[str(i)], cfg, xx, kind,
+                    _ffn_kind(cfg, kind, in_prefix=False),
+                    collect_cache=collect_cache, max_len=max_len)
+                au = au + a
+                entries.append(c)
+            ys = {str(i): e for i, e in enumerate(entries)} \
+                if collect_cache else None
+            return (xx, au), ys
+        if remat:
+            body = jax.checkpoint(body)
+        (x, aux), block_caches = jax.lax.scan(body, (x, aux), params["blocks"],
+                                              unroll=_scan_unroll())
+        if collect_cache:
+            caches["blocks"] = block_caches
+
+    if suffix:
+        entries = []
+        for lp, kind in zip(params["suffix"], suffix):
+            x, a, c = apply_layer(lp, cfg, x, kind,
+                                  _ffn_kind(cfg, kind, in_prefix=False),
+                                  collect_cache=collect_cache, max_len=max_len)
+            aux = aux + a
+            entries.append(c)
+        if collect_cache:
+            caches["suffix"] = tuple(entries)
+
+    x = apply_norm(params["final_norm"], cfg.norm, x)
+    return x, aux, (caches if collect_cache else None)
+
+
+def forward(params, cfg: ModelConfig, inputs: Dict[str, jax.Array], *,
+            dtype=jnp.bfloat16, remat: bool = False):
+    """Returns (final hidden states (B,S,d), aux)."""
+    x = embed_inputs(params, cfg, inputs, dtype)
+    x, aux, _ = run_stack(params, cfg, x, remat=remat)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+def lm_loss(params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
+            dtype=jnp.bfloat16, remat: bool = False,
+            loss_chunk: int = 512):
+    """Token cross-entropy; logits computed in seq chunks (vocab sharded)."""
+    x, aux = forward(params, cfg, batch, dtype=dtype, remat=remat)
+    targets = batch["targets"]
+    if cfg.frontend == "vision_stub":
+        # image prefix carries no LM targets
+        x = x[:, cfg.num_patches:]
+    B, S, _ = x.shape
+    mask = batch.get("loss_mask")
+
+    chunk = min(loss_chunk, S)
+    nch = (S + chunk - 1) // chunk
+    pad = nch * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        m = jnp.pad(mask if mask is not None
+                    else jnp.ones((B, S), jnp.float32), ((0, 0), (0, pad)))
+    else:
+        m = mask if mask is not None else jnp.ones((B, S), jnp.float32)
+
+    xs = x.reshape(B, nch, chunk, -1).swapaxes(0, 1)
+    ts = targets.reshape(B, nch, chunk).swapaxes(0, 1)
+    ms = m.reshape(B, nch, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_nll(xc, tc, mc):
+        # recomputed in backward: the (B,chunk,V) fp32 logits never live
+        # across the whole loss scan
+        logits = unembed(params["embed"], xc, tie=cfg.tie_embeddings,
+                         cap=cfg.logit_softcap,
+                         real_vocab=cfg.vocab_size)              # (B,chunk,V)
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mc
+        return jnp.sum(nll), jnp.sum(mc)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        xc, tc, mc = inp
+        nll, m_sum = chunk_nll(xc, tc, mc)
+        return (tot + nll, cnt + m_sum), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xs, ts, ms), unroll=_scan_unroll())
+    loss = tot / jnp.maximum(cnt, 1.0)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_loss_coef * aux
+    return loss, {"ce": tot / jnp.maximum(cnt, 1.0), "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+def prefill(params, cfg: ModelConfig, inputs: Dict[str, jax.Array],
+            max_len: int, *, dtype=jnp.bfloat16):
+    """Full-context forward; returns (last-token logits (B,V), caches)."""
+    x = embed_inputs(params, cfg, inputs, dtype)
+    x, _, caches = run_stack(params, cfg, x, collect_cache=True,
+                             max_len=max_len)
+    last = x[:, -1:]
+    logits = unembed(params["embed"], last, tie=cfg.tie_embeddings,
+                     cap=cfg.logit_softcap, real_vocab=cfg.vocab_size)[:, 0]
+    return logits, caches
+
+
+def decode_step(params, cfg: ModelConfig, inputs: Dict[str, jax.Array],
+                caches, position: jax.Array, *, dtype=jnp.bfloat16):
+    """One decode step: token (B,1) + caches -> (logits (B,V), new caches)."""
+    x = embed_inputs(params, cfg, inputs, dtype)
+    if cfg.contribution_gate:
+        x = contribution_gate(params["gate"], x)
+    prefix, pat, n_rep, suffix = stack_plan(cfg)
+    new_caches: Dict[str, Any] = {}
+
+    if prefix:
+        entries = []
+        for lp, kind, ce in zip(params["prefix"], prefix, caches["prefix"]):
+            x, ne = apply_layer_decode(
+                lp, cfg, x, kind, _ffn_kind(cfg, kind, in_prefix=True),
+                ce, position)
+            entries.append(ne)
+        new_caches["prefix"] = tuple(entries)
+
+    if n_rep:
+        def body(xx, inp):
+            block_p, block_c = inp
+            entries = []
+            for i, kind in enumerate(pat):
+                xx, ne = apply_layer_decode(
+                    block_p[str(i)], cfg, xx, kind,
+                    _ffn_kind(cfg, kind, in_prefix=False),
+                    block_c[str(i)], position)
+                entries.append(ne)
+            return xx, {str(i): e for i, e in enumerate(entries)}
+        x, block_caches = jax.lax.scan(
+            body, x, (params["blocks"], caches["blocks"]),
+            unroll=_scan_unroll())
+        new_caches["blocks"] = block_caches
+
+    if suffix:
+        entries = []
+        for lp, kind, ce in zip(params["suffix"], suffix, caches["suffix"]):
+            x, ne = apply_layer_decode(
+                lp, cfg, x, kind, _ffn_kind(cfg, kind, in_prefix=False),
+                ce, position)
+            entries.append(ne)
+        new_caches["suffix"] = tuple(entries)
+
+    x = apply_norm(params["final_norm"], cfg.norm, x)
+    logits = unembed(params["embed"], x, tie=cfg.tie_embeddings,
+                     cap=cfg.logit_softcap, real_vocab=cfg.vocab_size)[:, 0]
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (and ShapeDtypeStruct specs for the dry-run)
+# ---------------------------------------------------------------------------
+def _layer_cache(cfg: ModelConfig, kind: LayerKind, batch: int, max_len: int,
+                 dtype):
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        L = attn_mod.cache_length(cfg, kind, max_len)
+        return attn_mod.init_kv_cache(batch, L, cfg.num_kv_heads,
+                                      cfg.resolved_head_dim(), dtype)
+    if kind == RECURRENT:
+        return rglru_mod.init_rglru_state(cfg, batch)
+    if kind == SSM:
+        return ssm_mod.init_ssm_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    prefix, pat, n_rep, suffix = stack_plan(cfg)
+    caches: Dict[str, Any] = {}
+    if prefix:
+        caches["prefix"] = tuple(
+            _layer_cache(cfg, k, batch, max_len, dtype) for k in prefix)
+    if n_rep:
+        block = {str(i): _layer_cache(cfg, k, batch, max_len, dtype)
+                 for i, k in enumerate(pat)}
+        caches["blocks"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_rep,) + a.shape), block)
+    if suffix:
+        caches["suffix"] = tuple(
+            _layer_cache(cfg, k, batch, max_len, dtype) for k in suffix)
+    return caches
+
+
+def _layer_cache_axes(cfg: ModelConfig, kind: LayerKind):
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        return attn_mod.kv_cache_axes()
+    if kind == RECURRENT:
+        return rglru_mod.rglru_state_axes()
+    if kind == SSM:
+        return ssm_mod.ssm_state_axes()
+    raise ValueError(kind)
+
+
+def cache_axes(cfg: ModelConfig):
+    """Logical-axes pytree matching init_cache structure."""
+    prefix, pat, n_rep, suffix = stack_plan(cfg)
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    caches: Dict[str, Any] = {}
+    if prefix:
+        caches["prefix"] = tuple(_layer_cache_axes(cfg, k) for k in prefix)
+    if n_rep:
+        block = {str(i): _layer_cache_axes(cfg, k) for i, k in enumerate(pat)}
+        caches["blocks"] = jax.tree.map(lambda ax: (None,) + ax, block,
+                                        is_leaf=is_axes)
+    if suffix:
+        caches["suffix"] = tuple(_layer_cache_axes(cfg, k) for k in suffix)
+    return caches

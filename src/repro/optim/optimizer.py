@@ -1,0 +1,100 @@
+"""AdamW / SGD on parameter pytrees, with global-norm clipping.
+
+Optimizer state mirrors the param pytree, so the same logical-axis specs
+shard it (first/second moments inherit the param's PartitionSpec).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.optim.schedules import make_schedule
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any            # first moment (or momentum for sgd)
+    nu: Any            # second moment (empty tuple for sgd)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gnorm
+
+
+def adamw_init(params) -> OptState:
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros(), nu=zeros())
+
+
+def adamw_update(params, grads, state: OptState, tc: TrainConfig):
+    sched = make_schedule(tc)
+    if tc.grad_clip:
+        grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+    else:
+        _, gnorm = clip_by_global_norm(grads, 1e30)
+    step = state.step + 1
+    lr = sched(step)
+    b1, b2, eps = tc.b1, tc.b2, tc.eps
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m_new / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v_new / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (delta + tc.weight_decay * p32)
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    outer = jax.tree.structure(params)
+    inner = jax.tree.structure((0, 0, 0))
+    new_params, new_mu, new_nu = jax.tree.transpose(outer, inner, flat)
+    return new_params, OptState(step=step, mu=new_mu, nu=new_nu), \
+        {"lr": lr, "grad_norm": gnorm}
+
+
+def sgd_init(params) -> OptState:
+    mu = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=())
+
+
+def sgd_update(params, grads, state: OptState, tc: TrainConfig,
+               momentum: float = 0.9):
+    sched = make_schedule(tc)
+    if tc.grad_clip:
+        grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+    else:
+        _, gnorm = clip_by_global_norm(grads, 1e30)
+    step = state.step + 1
+    lr = sched(step)
+
+    def upd(p, g, m):
+        g = g.astype(jnp.float32)
+        m_new = momentum * m + g
+        p_new = p.astype(jnp.float32) - lr * m_new
+        return p_new.astype(p.dtype), m_new
+
+    flat = jax.tree.map(upd, params, grads, state.mu)
+    outer = jax.tree.structure(params)
+    inner = jax.tree.structure((0, 0))
+    new_params, new_mu = jax.tree.transpose(outer, inner, flat)
+    return new_params, OptState(step=step, mu=new_mu, nu=()), \
+        {"lr": lr, "grad_norm": gnorm}
+
+
+def make_optimizer(tc: TrainConfig):
+    if tc.optimizer == "adamw":
+        return adamw_init, lambda p, g, s: adamw_update(p, g, s, tc)
+    if tc.optimizer == "sgd":
+        return sgd_init, lambda p, g, s: sgd_update(p, g, s, tc)
+    raise ValueError(tc.optimizer)

@@ -1,0 +1,29 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def make_schedule(tc: TrainConfig):
+    """Returns step -> lr (fp32 scalar)."""
+    peak = tc.learning_rate
+    warm = max(tc.warmup_steps, 1)
+    total = max(tc.total_steps, warm + 1)
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm_lr = peak * step / warm
+        frac = jnp.clip((step - warm) / (total - warm), 0.0, 1.0)
+        if tc.schedule == "cosine":
+            post = peak * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        elif tc.schedule == "linear":
+            post = peak * (1.0 - frac)
+        elif tc.schedule == "constant":
+            post = jnp.full_like(frac, peak)
+        else:
+            raise ValueError(tc.schedule)
+        return jnp.where(step < warm, warm_lr, post)
+
+    return sched

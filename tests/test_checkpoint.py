@@ -1,0 +1,42 @@
+"""Checkpoint save/restore round-trip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.configs import get_config, smoke_variant
+from repro.models import transformer as tfm
+
+
+def test_roundtrip(tmp_path, key):
+    cfg = smoke_variant(get_config("qwen2-1.5b"))
+    params = tfm.init(cfg, key)
+    path = str(tmp_path / "ck.npz")
+    ckpt.save(path, params)
+    example = tfm.init(cfg, jax.random.key(99))      # different values
+    restored = ckpt.restore(path, example)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_shape_mismatch_raises(tmp_path, key):
+    cfg = smoke_variant(get_config("qwen2-1.5b"))
+    params = tfm.init(cfg, key)
+    path = str(tmp_path / "ck.npz")
+    ckpt.save(path, params)
+    cfg2 = smoke_variant(get_config("olmo-1b"))
+    with pytest.raises((ValueError, KeyError)):
+        ckpt.restore(path, tfm.init(cfg2, key))
+
+
+def test_opt_state_roundtrip(tmp_path, key):
+    from repro.configs import TrainConfig
+    from repro.optim import make_optimizer
+    cfg = smoke_variant(get_config("olmo-1b"))
+    params = tfm.init(cfg, key)
+    opt = make_optimizer(TrainConfig())[0](params)
+    path = str(tmp_path / "opt.npz")
+    ckpt.save(path, opt)
+    restored = ckpt.restore(path, opt)
+    assert int(restored.step) == int(opt.step)

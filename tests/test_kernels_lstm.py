@@ -1,0 +1,49 @@
+"""Fused LSTM cell kernel: sweep vs oracle + equivalence with the model's
+pure-JAX cell (core/temporal.py)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.lstm_cell.kernel import lstm_cell_pallas
+from repro.kernels.lstm_cell.ops import lstm_cell_fused, pack_weights
+from repro.kernels.lstm_cell.ref import lstm_cell_ref
+
+
+def _mk(rng, B, D, H, dtype):
+    x = jnp.asarray(rng.normal(0, 1, (B, D)), dtype)
+    h = jnp.asarray(rng.normal(0, 1, (B, H)), dtype)
+    c = jnp.asarray(rng.normal(0, 1, (B, H)), dtype)
+    wx = jnp.asarray(rng.normal(0, 0.2, (D, 4, H)), jnp.float32)
+    wh = jnp.asarray(rng.normal(0, 0.2, (H, 4, H)), jnp.float32)
+    b = jnp.asarray(rng.normal(0, 0.1, (4, H)), jnp.float32)
+    return x, h, c, wx, wh, b
+
+
+@pytest.mark.parametrize("B,D,H", [(1, 8, 16), (7, 48, 160), (8, 64, 128),
+                                   (3, 100, 200), (16, 32, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sweep_matches_ref(rng, B, D, H, dtype):
+    args = _mk(rng, B, D, H, dtype)
+    h1, c1 = lstm_cell_pallas(*args, interpret=True)
+    h2, c2 = lstm_cell_ref(*args)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(h1, np.float32),
+                               np.asarray(h2, np.float32), atol=tol)
+    np.testing.assert_allclose(np.asarray(c1, np.float32),
+                               np.asarray(c2, np.float32), atol=tol)
+
+
+def test_matches_model_cell(rng, key):
+    """Kernel == core/temporal.py lstm_cell under the layout adapter."""
+    from repro.core.temporal import lstm_cell, lstm_cell_params
+    from repro.distributed.sharding import ParamFactory
+    D, H, B = 24, 32, 5
+    params = lstm_cell_params(ParamFactory(key), D, H)
+    x = jnp.asarray(rng.normal(0, 1, (B, D)).astype("float32"))
+    h = jnp.asarray(rng.normal(0, 1, (B, H)).astype("float32"))
+    c = jnp.asarray(rng.normal(0, 1, (B, H)).astype("float32"))
+    want_h, want_c = lstm_cell(params, x, h, c)
+    wx, wh, b = pack_weights(params["wx"], params["wh"], params["b"])
+    got_h, got_c = lstm_cell_fused(x, h, c, wx, wh, b)
+    np.testing.assert_allclose(np.asarray(got_h), np.asarray(want_h), atol=2e-6)
+    np.testing.assert_allclose(np.asarray(got_c), np.asarray(want_c), atol=2e-6)

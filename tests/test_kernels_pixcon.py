@@ -1,0 +1,56 @@
+"""Pix-Con kernel: shape/dtype sweep vs the pure-jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.pixcon.kernel import pixcon_gate_pallas
+from repro.kernels.pixcon.ops import pixcon_gate
+from repro.kernels.pixcon.ref import pixcon_gate_ref
+
+
+def _mk(rng, B, T, P, F, H, dtype):
+    x = jnp.asarray(rng.normal(0, 1, (B, T, P)), dtype)
+    feats = jnp.asarray(rng.normal(0, 1, (B, P, F)), dtype)
+    w1 = jnp.asarray(rng.normal(0, 0.5, (F, H)), jnp.float32)
+    b1 = jnp.asarray(rng.normal(0, 0.1, (H,)), jnp.float32)
+    w2 = jnp.asarray(rng.normal(0, 0.5, (H,)), jnp.float32)
+    b2 = jnp.zeros((1,), jnp.float32)
+    return x, feats, w1, b1, w2, b2
+
+
+@pytest.mark.parametrize("B,T,P", [(1, 8, 16), (3, 33, 64), (8, 128, 64),
+                                   (2, 200, 256), (5, 17, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sweep_matches_ref(rng, B, T, P, dtype):
+    args = _mk(rng, B, T, P, 4, 32, dtype)
+    got = pixcon_gate_pallas(*args, interpret=True)
+    want = pixcon_gate_ref(*args[:4], args[4], args[5])
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("normalize", [True, False])
+@pytest.mark.parametrize("temperature", [0.5, 1.0, 4.0])
+def test_options(rng, normalize, temperature):
+    args = _mk(rng, 2, 16, 64, 4, 16, jnp.float32)
+    got = pixcon_gate_pallas(*args, normalize=normalize,
+                             temperature=temperature, interpret=True)
+    want = pixcon_gate_ref(*args[:4], args[4], args[5],
+                           normalize=normalize, temperature=temperature)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_jitted_wrapper(rng):
+    args = _mk(rng, 4, 30, 64, 4, 32, jnp.float32)
+    got = pixcon_gate(*args)
+    want = pixcon_gate_ref(*args[:4], args[4], args[5])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_blockspec_tiling_off_sizes(rng):
+    """B/T not multiples of the block sizes exercise the grid edges."""
+    args = _mk(rng, 9, 130, 64, 4, 32, jnp.float32)
+    got = pixcon_gate_pallas(*args, block_b=4, block_t=64, interpret=True)
+    want = pixcon_gate_ref(*args[:4], args[4], args[5])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)

@@ -1,0 +1,68 @@
+"""launch/steps input specs + mesh constructor (pure shape logic, 1 device)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.launch.steps import batch_struct, input_specs
+from repro.launch.dryrun import matrix, parse_collectives
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_train_specs_cover_targets(arch):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES["train_4k"]
+    b = batch_struct(cfg, shape)
+    assert "targets" in b
+    if cfg.family == "audio":
+        assert b["frames"].shape == (256, 4096, cfg.frontend_dim)
+    elif cfg.family == "vlm":
+        assert b["patches"].shape[1] == cfg.num_patches
+        # patch prefix + text == seq_len
+        assert b["tokens"].shape[1] + cfg.num_patches == 4096
+    else:
+        assert b["tokens"].shape == (256, 4096)
+
+
+@pytest.mark.parametrize("arch", [a for a in ASSIGNED_ARCHS
+                                  if get_config(a).supports_decode()])
+def test_decode_specs_have_cache(arch):
+    cfg = get_config(arch)
+    specs = input_specs(cfg, "decode_32k")
+    assert specs["batch"]["tokens"].shape == (128, 1)
+    assert specs["position"].shape == ()
+    leaves = jax.tree.leaves(specs["cache"])
+    assert leaves, "cache must be non-empty"
+    # KV caches sized by seq_len (or window for local layers)
+    total = sum(l.size * l.dtype.itemsize for l in leaves)
+    assert total > 0
+
+
+def test_matrix_has_documented_skips():
+    combos = matrix()
+    assert len(combos) == 32
+    archs = {a for a, _ in combos}
+    assert "gemma2-2b-localonly" in archs          # long-context variant
+    assert ("hubert-xlarge", "decode_32k") not in combos
+    assert ("olmo-1b", "long_500k") not in combos
+    assert ("mamba2-130m", "long_500k") in combos
+    assert ("recurrentgemma-2b", "long_500k") in combos
+
+
+def test_parse_collectives():
+    hlo = """
+  %ar = f32[2,4] all-reduce(%x), replica_groups={}
+  %ag.1 = bf16[8,16] all-gather(%y), dims={0}
+  %a2a = (f32[4], f32[4]) all-to-all(%p, %q)
+  %cp-start = f32[2] collective-permute-start(%z)
+"""
+    out = parse_collectives(hlo)
+    assert out["bytes"]["all-reduce"] == 32
+    assert out["bytes"]["all-gather"] == 256
+    assert out["bytes"]["all-to-all"] == 32
+    assert out["counts"]["collective-permute"] == 1
+
+
+def test_mesh_constants():
+    from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+    assert PEAK_FLOPS_BF16 == 197e12 and HBM_BW == 819e9 and ICI_BW == 50e9

@@ -1,0 +1,28 @@
+import numpy as np
+
+from repro.metrics import Meter, nse
+
+
+def test_nse_perfect():
+    obs = np.array([1.0, 2.0, 3.0, 4.0])
+    assert float(nse(obs, obs)) == 1.0
+
+
+def test_nse_mean_predictor_is_zero():
+    obs = np.array([1.0, 2.0, 3.0, 4.0])
+    sim = np.full_like(obs, obs.mean())
+    np.testing.assert_allclose(float(nse(sim, obs)), 0.0, atol=1e-6)
+
+
+def test_nse_bad_predictor_negative():
+    obs = np.array([1.0, 2.0, 3.0, 4.0])
+    sim = -obs
+    assert float(nse(sim, obs)) < 0
+
+
+def test_meter():
+    m = Meter()
+    m.update(loss=1.0)
+    m.update(loss=3.0)
+    assert m.mean("loss") == 2.0 and m.last("loss") == 3.0
+    assert m.elapsed() >= 0

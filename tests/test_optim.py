@@ -1,0 +1,58 @@
+"""Optimizer + schedule behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import TrainConfig
+from repro.optim import clip_by_global_norm, make_optimizer
+from repro.optim.schedules import make_schedule
+
+
+def test_adamw_minimizes_quadratic():
+    tc = TrainConfig(learning_rate=0.1, total_steps=200, warmup_steps=5,
+                     weight_decay=0.0)
+    init, update = make_optimizer(tc)
+    params = {"w": jnp.asarray([3.0, -2.0]), "nested": ({"b": jnp.ones(3)},)}
+    target = jax.tree.map(jnp.zeros_like, params)
+    opt = init(params)
+    loss = lambda p: sum(jnp.sum(x ** 2) for x in jax.tree.leaves(p))
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, opt, m = update(params, g, opt)
+    assert float(loss(params)) < 1e-3
+    assert int(opt.step) == 150
+
+
+def test_sgd_runs():
+    tc = TrainConfig(learning_rate=0.05, optimizer="sgd", total_steps=100,
+                     warmup_steps=1)
+    init, update = make_optimizer(tc)
+    params = {"w": jnp.asarray([1.0])}
+    opt = init(params)
+    for _ in range(50):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, opt, _ = update(params, g, opt)
+    assert abs(float(params["w"][0])) < 0.5
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones(4) * 10.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(norm), 20.0)
+    got = float(jnp.sqrt(jnp.sum(clipped["a"] ** 2)))
+    np.testing.assert_allclose(got, 1.0, rtol=1e-5)
+    # under the cap: unchanged
+    g2 = {"a": jnp.ones(4) * 0.1}
+    c2, _ = clip_by_global_norm(g2, 1.0)
+    np.testing.assert_allclose(np.asarray(c2["a"]), 0.1, rtol=1e-6)
+
+
+def test_schedules():
+    for kind in ("cosine", "linear", "constant"):
+        tc = TrainConfig(learning_rate=1e-3, schedule=kind,
+                         warmup_steps=10, total_steps=100)
+        s = make_schedule(tc)
+        assert float(s(0)) == 0.0 if kind != "constant" else True
+        np.testing.assert_allclose(float(s(10)), 1e-3, rtol=1e-5)
+        if kind != "constant":
+            assert float(s(100)) < 1e-4

@@ -1,0 +1,95 @@
+"""Hypothesis property tests on system invariants."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.partitioner import partition_pixels
+from repro.kernels.conv1d.ref import causal_conv1d_ref
+from repro.metrics import nse
+from repro.models.layers import cross_entropy, softcap
+
+hypothesis.settings.register_profile(
+    "fast", settings(max_examples=25, deadline=None))
+hypothesis.settings.load_profile("fast")
+
+floats = st.floats(-10, 10, allow_nan=False, width=32)
+
+
+@given(hnp.arrays(np.float32, st.integers(4, 40), elements=floats),
+       st.floats(0.1, 5.0))
+def test_nse_shift_of_perfect_prediction(obs, eps):
+    """NSE(obs, obs) == 1; adding error strictly lowers it (if var>0)."""
+    if np.var(obs) < 1e-3:
+        return
+    assert abs(float(nse(obs, obs)) - 1.0) < 1e-5
+    noisy = obs + eps * np.std(obs)
+    assert float(nse(noisy, obs)) < 1.0
+
+
+@given(hnp.arrays(np.float32, hnp.array_shapes(min_dims=2, max_dims=2,
+                                               min_side=2, max_side=16),
+                  elements=floats),
+       st.floats(1.0, 50.0))
+def test_softcap_bounds(x, cap):
+    y = np.asarray(softcap(jnp.asarray(x), cap))
+    assert np.all(np.abs(y) <= cap + 1e-4)
+    # sign preserved away from subnormal underflow
+    big = np.abs(x) > 1e-6
+    assert np.all(np.sign(y)[big] == np.sign(x)[big])
+
+
+@given(st.integers(1, 4), st.integers(2, 24), st.integers(2, 50))
+def test_cross_entropy_nonneg_and_exact_for_onehot(b, v, s):
+    rng = np.random.default_rng(b * 100 + v)
+    logits = jnp.asarray(rng.normal(0, 3, (b, s, v)).astype("float32"))
+    targets = jnp.asarray(rng.integers(0, v, (b, s)), jnp.int32)
+    ce = float(cross_entropy(logits, targets))
+    assert ce >= -1e-5
+    # delta-function logits -> ce ~ 0
+    hot = jax.nn.one_hot(targets, v) * 50.0
+    assert float(cross_entropy(hot, targets)) < 1e-3
+
+
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(2, 8))
+def test_partitioner_preserves_values(b, g_pow, t):
+    g = 2 ** g_pow if 2 ** g_pow <= 8 else 8
+    p = g * 4
+    rng = np.random.default_rng(b)
+    x = jnp.asarray(rng.normal(0, 1, (b, t, p)).astype("float32"))
+    w = jnp.asarray(rng.uniform(0, 1, (b, p)).astype("float32"))
+    parts, order = partition_pixels(x, w, g)
+    # multiset of values preserved (it's a permutation along pixels)
+    np.testing.assert_allclose(
+        np.sort(np.asarray(parts).reshape(b, g * t * (p // g))),
+        np.sort(np.asarray(x).reshape(b, t * p)), rtol=1e-6)
+
+
+@given(st.integers(1, 3), st.integers(5, 40), st.integers(1, 4),
+       st.integers(1, 4))
+def test_conv_shift_equivariance(b, s, c, k):
+    """Causal conv of a shifted signal == shifted conv (interior points)."""
+    rng = np.random.default_rng(s)
+    x = rng.normal(0, 1, (b, s, c)).astype("float32")
+    w = rng.normal(0, 1, (k, c)).astype("float32")
+    bias = np.zeros(c, "float32")
+    y = np.asarray(causal_conv1d_ref(jnp.asarray(x), jnp.asarray(w),
+                                     jnp.asarray(bias)))
+    xs = np.roll(x, 1, axis=1)
+    ys = np.asarray(causal_conv1d_ref(jnp.asarray(xs), jnp.asarray(w),
+                                      jnp.asarray(bias)))
+    # interior: y shifted by one equals conv of shifted input
+    np.testing.assert_allclose(ys[:, k:], y[:, k - 1:-1], atol=1e-5)
+
+
+@given(st.integers(0, 10_000))
+def test_rglru_decay_in_unit_interval(seed):
+    """a = exp(-c*softplus(lam)*r) in (0,1] for any lam, r in (0,1)."""
+    rng = np.random.default_rng(seed)
+    lam = rng.normal(0, 3)
+    r = rng.uniform(0, 1)
+    a = np.exp(-8.0 * np.log1p(np.exp(lam)) * r)
+    assert 0.0 < a <= 1.0

@@ -1,0 +1,112 @@
+"""Logical-axis sharding rule engine + 1-device end-to-end pjit."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config, smoke_variant
+from repro.distributed.sharding import (
+    ParamFactory, make_rules, resolve_pspec, tree_pspecs,
+)
+from repro.models import transformer as tfm
+
+
+@pytest.fixture(scope="module")
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_rules_head_vs_ffn_mode(mesh11):
+    r_h = make_rules(get_config("olmo-1b"), mesh=mesh11)
+    r_f = make_rules(get_config("qwen2-1.5b"), mesh=mesh11)
+    assert r_h["heads"] == "model" and r_f["heads"] is None
+    assert r_f["ffn"] == "model"
+    assert r_f["cache_seq"] == "model" and r_h["cache_seq"] is None
+    assert r_h["batch"] == "data"
+
+
+def test_resolve_pspec_divisibility():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = {"heads": "model", "embed": None, "batch": "data"}
+    # 1-way axes always divide
+    assert resolve_pspec(("batch", None, "heads"), (4, 7, 16), mesh, rules) \
+        == P("data", None, "model")
+
+
+def test_resolve_pspec_indivisible_replicates(monkeypatch):
+    """pjit argument shardings require exact divisibility, so any
+    indivisible dim replicates (24 or 8 heads on a 16-way axis)."""
+    class FakeMesh:
+        axis_names = ("data", "model")
+        class devices:
+            shape = (16, 16)
+    rules = {"heads": "model", "batch": "data"}
+    assert resolve_pspec(("heads",), (24,), FakeMesh, rules) == P(None)
+    assert resolve_pspec(("heads",), (8,), FakeMesh, rules) == P(None)
+    assert resolve_pspec(("heads",), (32,), FakeMesh, rules) == P("model")
+    # no duplicate mesh axes across dims
+    spec = resolve_pspec(("batch", "batch"), (32, 32), FakeMesh, rules)
+    assert spec == P("data", None)
+
+
+def test_param_specs_align_with_params(key):
+    """spec tree and param tree must be structurally identical."""
+    for arch in ("olmo-1b", "deepseek-moe-16b", "mamba2-130m",
+                 "recurrentgemma-2b", "gemma2-2b", "internvl2-2b"):
+        cfg = smoke_variant(get_config(arch))
+        params = tfm.init(cfg, key)
+        specs = tfm.param_specs(cfg)
+        is_axes = lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
+        s_paths = [p for p, _ in
+                   jax.tree_util.tree_flatten_with_path(
+                       specs, is_leaf=is_axes)[0]]
+        p_paths = [p for p, _ in
+                   jax.tree_util.tree_flatten_with_path(params)[0]]
+        assert s_paths == p_paths, arch
+        # ndim of every axes tuple matches the param
+        flat_s = jax.tree.leaves(specs, is_leaf=is_axes)
+        flat_p = jax.tree.leaves(params)
+        for ax, arr in zip(flat_s, flat_p):
+            assert len(ax) == arr.ndim
+
+
+def test_tree_pspecs_resolution(mesh11, key):
+    cfg = smoke_variant(get_config("olmo-1b"))
+    rules = make_rules(cfg, mesh=mesh11)
+    params = tfm.init(cfg, key)
+    specs = tfm.param_specs(cfg)
+    pspecs = tree_pspecs(specs, params, mesh11, rules)
+    flat = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    assert all(isinstance(p, P) for p in flat)
+    assert len(flat) == len(jax.tree.leaves(params))
+
+
+def test_jit_train_step_on_1x1_mesh(key):
+    """End-to-end pjit with shardings on the single-device mesh."""
+    from repro.configs import INPUT_SHAPES, TrainConfig
+    from repro.launch.steps import (
+        batch_pspecs, batch_struct, make_train_step_fn, opt_pspecs,
+        param_pspecs,
+    )
+    from repro.optim import make_optimizer
+    from repro.data.tokens import synthetic_token_batch
+    import dataclasses
+    cfg = smoke_variant(get_config("olmo-1b"))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = make_rules(cfg, mesh=mesh)
+    tc = TrainConfig(total_steps=10, warmup_steps=1)
+    pspecs, _ = param_pspecs(cfg, mesh, rules)
+    from jax.sharding import NamedSharding
+    ns = lambda t: jax.tree.map(lambda p: NamedSharding(mesh, p), t,
+                                is_leaf=lambda x: isinstance(x, P))
+    params = tfm.init(cfg, key)
+    opt = make_optimizer(tc)[0](params)
+    fn = jax.jit(make_train_step_fn(cfg, tc),
+                 in_shardings=(ns(pspecs), ns(opt_pspecs(pspecs, tc)), None),
+                 out_shardings=(ns(pspecs), ns(opt_pspecs(pspecs, tc)), None))
+    b = {k: jnp.asarray(v)
+         for k, v in synthetic_token_batch(cfg, 2, 16).items()}
+    p2, o2, m = fn(params, opt, b)
+    assert np.isfinite(float(m["loss"]))

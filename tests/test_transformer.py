@@ -1,0 +1,107 @@
+"""Stack-level invariants: decode == full forward, causality, vlm prefix."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, smoke_variant
+from repro.data.tokens import synthetic_token_batch
+from repro.models import transformer as T
+from repro.models.layers import unembed
+
+S = 16
+
+
+def _ample_moe(cfg):
+    if cfg.moe is not None:
+        return cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                   capacity_factor=8.0))
+    return cfg
+
+
+@pytest.mark.parametrize("arch", [a for a in ASSIGNED_ARCHS
+                                  if get_config(a).supports_decode()])
+def test_decode_matches_full_forward(arch, key):
+    cfg = _ample_moe(smoke_variant(get_config(arch)))
+    params = T.init(cfg, key)
+    batch = {k: jnp.asarray(v)
+             for k, v in synthetic_token_batch(cfg, 2, S).items()}
+    x, _ = T.forward(params, cfg, batch, dtype=jnp.float32)
+    want = unembed(params["embed"], x[:, -1:], tie=cfg.tie_embeddings,
+                   cap=cfg.logit_softcap)[:, 0]
+    if cfg.family == "vlm":
+        pre = {"patches": batch["patches"], "tokens": batch["tokens"][:, :-1]}
+        pos = cfg.num_patches + batch["tokens"].shape[1] - 1
+    else:
+        pre = {"tokens": batch["tokens"][:, :-1]}
+        pos = S - 1
+    _, cache = T.prefill(params, cfg, pre, max_len=S + cfg.num_patches + 4,
+                         dtype=jnp.float32)
+    got, _ = T.decode_step(params, cfg, {"tokens": batch["tokens"][:, -1:]},
+                           cache, jnp.asarray(pos, jnp.int32),
+                           dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_causality(key):
+    """Future tokens must not affect past logits (causal archs)."""
+    cfg = smoke_variant(get_config("olmo-1b"))
+    params = T.init(cfg, key)
+    t1 = jnp.ones((1, S), jnp.int32) * 3
+    t2 = t1.at[:, -1].set(7)                                    # change last token
+    x1, _ = T.forward(params, cfg, {"tokens": t1}, dtype=jnp.float32)
+    x2, _ = T.forward(params, cfg, {"tokens": t2}, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(x1[:, :-1]), np.asarray(x2[:, :-1]),
+                               atol=1e-6)
+    assert float(jnp.max(jnp.abs(x1[:, -1] - x2[:, -1]))) > 1e-4
+
+
+def test_encoder_is_bidirectional(key):
+    cfg = smoke_variant(get_config("hubert-xlarge"))
+    params = T.init(cfg, key)
+    f = jnp.asarray(np.random.default_rng(0).normal(
+        0, 1, (1, S, cfg.frontend_dim)).astype("float32"))
+    f2 = f.at[:, -1].add(1.0)
+    x1, _ = T.forward(params, cfg, {"frames": f}, dtype=jnp.float32)
+    x2, _ = T.forward(params, cfg, {"frames": f2}, dtype=jnp.float32)
+    # encoder: a change in the LAST frame must affect EARLIER positions
+    assert float(jnp.max(jnp.abs(x1[:, 0] - x2[:, 0]))) > 1e-6
+
+
+def test_vlm_patch_prefix_changes_text_logits(key):
+    cfg = smoke_variant(get_config("internvl2-2b"))
+    params = T.init(cfg, key)
+    batch = {k: jnp.asarray(v)
+             for k, v in synthetic_token_batch(cfg, 1, S).items()}
+    x1, _ = T.forward(params, cfg, batch, dtype=jnp.float32)
+    batch2 = dict(batch)
+    batch2["patches"] = batch["patches"] + 1.0
+    x2, _ = T.forward(params, cfg, batch2, dtype=jnp.float32)
+    assert float(jnp.max(jnp.abs(x1 - x2))) > 1e-4
+
+
+def test_loss_mask_respected(key):
+    cfg = smoke_variant(get_config("hubert-xlarge"))
+    params = T.init(cfg, key)
+    b = {k: jnp.asarray(v) for k, v in synthetic_token_batch(cfg, 2, S).items()}
+    l1, _ = T.lm_loss(params, cfg, b, dtype=jnp.float32)
+    # flipping targets at UNmasked positions must not change the loss
+    tweaked = dict(b)
+    flip = (1 - b["loss_mask"]).astype(bool)
+    tweaked["targets"] = jnp.where(flip, (b["targets"] + 1) % cfg.vocab_size,
+                                   b["targets"])
+    l2, _ = T.lm_loss(params, cfg, tweaked, dtype=jnp.float32)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_pattern_stack_plan():
+    cfg = get_config("recurrentgemma-2b")
+    prefix, pat, n_rep, suffix = T.stack_plan(cfg)
+    assert len(prefix) == 0 and pat == ("recurrent", "recurrent", "local")
+    assert n_rep == 8 and suffix == ("recurrent", "recurrent")
+    assert len(prefix) + n_rep * len(pat) + len(suffix) == cfg.num_layers
+    cfg2 = get_config("deepseek-moe-16b")
+    prefix, pat, n_rep, suffix = T.stack_plan(cfg2)
+    assert len(prefix) == 1 and n_rep == 27 and not suffix
