@@ -20,29 +20,31 @@ from repro.configs import TrainConfig, get_config
 from repro.core import domst
 from repro.data import generate_all_watersheds, make_training_windows
 from repro.data.pipeline import InputPipeline, train_test_split
-from repro.optim import make_optimizer
+from repro.train import Engine
 
 
 def train_stacked(cfg_name, windows, ip, epochs):
     cfg = get_config(cfg_name)
     tc = TrainConfig(learning_rate=3e-3, total_steps=epochs * 60,
                      warmup_steps=20)
-    params = domst.init_stacked(cfg, jax.random.key(0), len(windows))
-    opt = jax.vmap(make_optimizer(tc)[0])(params)
-    step = domst.make_stacked_train_step(cfg, tc)
-    steps = 0
+    # The unified engine: stacked/IP-D mode vmaps the step over the leading
+    # watershed axis and shards it over the mesh "data"/"pod" axes; the
+    # TrainState (params + opt moments + rng) is donated through the step.
+    engine = Engine.for_domst(cfg, tc, stacked=True)
+    state = engine.init_state(
+        jax.random.key(0),
+        domst.init_stacked(cfg, jax.random.key(0), len(windows)))
     for epoch in range(epochs):
         for b in ip.stacked_batches(epoch):
-            b = {k: jnp.asarray(v) for k, v in b.items()}
-            params, opt, m = step(params, opt, b)
-            steps += 1
+            state, m = engine.step(
+                state, {k: jnp.asarray(v) for k, v in b.items()})
     nses = []
     for i, w in enumerate(windows):
-        p = jax.tree.map(lambda x: x[i], params)
+        p = jax.tree.map(lambda x: x[i], state.params)
         _, te = train_test_split(w)
         ev = domst.evaluate(p, cfg, {k: jnp.asarray(v) for k, v in te.items()})
         nses.append(float(ev["nse"]))
-    return np.asarray(nses), steps
+    return np.asarray(nses), int(state.step)
 
 
 def main():

@@ -18,7 +18,7 @@ from repro.configs import TrainConfig, get_config, smoke_variant
 from repro.data.tokens import synthetic_token_batch
 from repro.metrics import Meter
 from repro.models import transformer as tfm
-from repro.optim import make_optimizer
+from repro.train import Engine
 
 
 def main():
@@ -29,6 +29,8 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--accum-steps", type=int, default=1,
+                    help="gradient-accumulation microbatches per step")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -43,23 +45,17 @@ def main():
 
     tc = TrainConfig(learning_rate=6e-4, total_steps=args.steps,
                      warmup_steps=args.steps // 10, remat="block")
-    opt_init, opt_update = make_optimizer(tc)
-    opt = opt_init(params)
-
-    @jax.jit
-    def step(p, o, b):
-        (loss, mm), g = jax.value_and_grad(
-            lambda q: tfm.lm_loss(q, cfg, b, remat=True),
-            has_aux=True)(p)
-        p, o, om = opt_update(p, g, o)
-        return p, o, loss
+    # The unified engine: mesh-sharded via the logical-axis rules, state
+    # donated through the jitted step, microbatched when --accum-steps > 1.
+    engine = Engine.for_lm(cfg, tc, accum_steps=args.accum_steps)
+    state = engine.init_state(jax.random.key(0), params)
 
     meter = Meter()
     for i in range(args.steps):
         b = {k: jnp.asarray(v) for k, v in synthetic_token_batch(
             cfg, args.batch, args.seq, seed=i).items()}
-        params, opt, loss = step(params, opt, b)
-        meter.update(loss=float(loss))
+        state, m = engine.step(state, b)
+        meter.update(loss=float(m["loss"]))
         if i % max(args.steps // 15, 1) == 0:
             print(f"step {i:4d}  loss {meter.last('loss'):.4f}  "
                   f"({meter.elapsed():.0f}s)", flush=True)

@@ -29,6 +29,16 @@ from repro.metrics.nse import nse
 from repro.optim import make_optimizer
 
 
+# Logical axes per batch input, resolved by the sharding rule table; the
+# engine prepends the watershed ("batch" -> pod/data) axis in stacked mode.
+BATCH_AXES = {
+    "precip": ("batch", "time", "pixels"),
+    "target_day": ("batch", "pixels"),
+    "dist": ("batch", "pixels"),
+    "discharge": ("batch",),
+}
+
+
 def domst_params(cfg: ModelConfig, mk: ParamFactory):
     dc = cfg.domst
     p: Dict[str, Any] = {}
@@ -78,26 +88,46 @@ def evaluate(params, cfg: ModelConfig, batch) -> Dict[str, jax.Array]:
 
 
 # ---------------------------------------------------------------------------
-# Train steps
+# Train steps — thin veneers over the unified engine (repro/train/).
+# Donation is off here because callers of this seed-era signature own the
+# param/opt buffers and may reuse them across calls.
 # ---------------------------------------------------------------------------
-def make_train_step(cfg: ModelConfig, tc: TrainConfig):
-    """Single-watershed train step (the paper's per-node unit of work)."""
-    _, opt_update = make_optimizer(tc)
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, *, mesh=None):
+    """Single-watershed train step (the paper's per-node unit of work).
 
-    @jax.jit
+    Without ``mesh`` the step is a plain jit (inputs keep whatever sharding
+    the caller committed them with, matching the seed behavior); pass a
+    mesh to pin rule-table shardings at the jit boundary."""
+    from repro.train import Engine
+    eng = Engine.for_domst(cfg, tc, mesh=mesh, donate=False,
+                           explicit_shardings=mesh is not None)
+
     def train_step(params, opt_state, batch):
-        (loss, metrics), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params, cfg, batch)
-        params, opt_state, om = opt_update(params, grads, opt_state)
-        return params, opt_state, {**metrics, **om, "loss": loss}
+        st, m = eng.step(eng.wrap(params, opt_state), batch)
+        return st.params, st.opt_state, m
 
     return train_step
 
 
-def make_stacked_train_step(cfg: ModelConfig, tc: TrainConfig):
+def make_stacked_train_step(cfg: ModelConfig, tc: TrainConfig, *, mesh=None):
     """Vectorized multi-watershed step: params/batches have a leading
-    watershed axis (W, ...) — one replica per watershed (paper Fig. 2a),
-    sharded over the data/pod mesh axes on TPU."""
+    watershed axis (W, ...) — one replica per watershed (paper Fig. 2a).
+    Pass ``mesh`` to shard that axis over its data/pod axes; without it the
+    step is a plain jit over caller-placed inputs (seed behavior)."""
+    from repro.train import Engine
+    eng = Engine.for_domst(cfg, tc, mesh=mesh, stacked=True, donate=False,
+                           explicit_shardings=mesh is not None)
+
+    def train_step(params, opt_state, batch):
+        st, m = eng.step(eng.wrap(params, opt_state), batch)
+        return st.params, st.opt_state, m
+
+    return train_step
+
+
+def make_reference_stacked_step(cfg: ModelConfig, tc: TrainConfig):
+    """The seed hand-rolled jit(vmap) stacked step, retained verbatim as the
+    numerical baseline for the engine parity test (tests/test_engine.py)."""
     _, opt_update = make_optimizer(tc)
 
     def one(params, opt_state, batch):

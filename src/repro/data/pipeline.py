@@ -103,10 +103,14 @@ class InputPipeline:
                 "discharge": w.discharge[sl],
             }
 
+    def steps_per_epoch(self) -> int:
+        """Stacked steps per epoch (bounded by the smallest watershed)."""
+        return min(self.num_batches(len(w.discharge)) for w in self.windows)
+
     def stacked_batches(self, epoch: int) -> Iterator[Dict[str, np.ndarray]]:
         """One batch per step with a leading watershed axis (W, B, ...)."""
         its = [self.batches(w, epoch) for w in self.windows]
-        n_steps = min(self.num_batches(len(w.discharge)) for w in self.windows)
+        n_steps = self.steps_per_epoch()
         for _ in range(n_steps):
             parts = [next(it) for it in its]
             yield {k: np.stack([p[k] for p in parts]) for k in parts[0]}

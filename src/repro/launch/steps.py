@@ -90,39 +90,17 @@ def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
 # Step functions (pure; jit/sharding bound later)
 # ---------------------------------------------------------------------------
 def make_train_step_fn(cfg: ModelConfig, tc: TrainConfig):
+    """Pure (params, opt, batch) train step; gradient accumulation over
+    ``tc.grad_accum`` microbatches via the engine's shared scan."""
+    from repro.train.engine import accumulate_grads
     _, opt_update = make_optimizer(tc)
     remat = tc.remat != "none"
     A = max(tc.grad_accum, 1)
 
     def train_step(params, opt_state, batch):
-        if A == 1:
-            (loss, metrics), grads = jax.value_and_grad(
-                lambda p: tfm.lm_loss(p, cfg, batch, remat=remat),
-                has_aux=True)(params)
-        else:
-            # gradient accumulation: scan over microbatches; activation
-            # live-set shrinks by A, grads accumulate in fp32
-            micro = jax.tree.map(
-                lambda x: x.reshape((A, x.shape[0] // A) + x.shape[1:]),
-                batch)
-
-            def body(carry, mb):
-                gsum, lsum, asum = carry
-                (loss, metrics), g = jax.value_and_grad(
-                    lambda p: tfm.lm_loss(p, cfg, mb, remat=remat),
-                    has_aux=True)(params)
-                gsum = jax.tree.map(
-                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
-                return (gsum, lsum + loss, asum + metrics["aux"]), None
-
-            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
-                              params)
-            (gsum, lsum, asum), _ = jax.lax.scan(
-                body, (g0, jnp.zeros((), jnp.float32),
-                       jnp.zeros((), jnp.float32)), micro)
-            grads = jax.tree.map(lambda g: g / A, gsum)
-            loss = lsum / A
-            metrics = {"ce": loss, "aux": asum / A}
+        grads, loss, metrics = accumulate_grads(
+            lambda p, b: tfm.lm_loss(p, cfg, b, remat=remat),
+            params, batch, A)
         params, opt_state, om = opt_update(params, grads, opt_state)
         return params, opt_state, {**metrics, **om, "loss": loss}
 

@@ -1,96 +1,124 @@
 """Training launcher.
 
-Two drive modes, matching the paper's two layers of the system:
+Two drive modes, matching the paper's two layers of the system, both
+running through the unified mesh-sharded engine (``repro/train/``):
 
   * ``--arch domst*``  — multi-watershed Dom-ST training on the synthetic
     hydrology dataset with the paper's I.P. distribution (sequential or
-    stacked/IP-D execution);
+    stacked/IP-D execution; the watershed axis shards over "pod"/"data");
   * any assigned LM arch — reduced-variant (``--smoke``) or full-config
     token training on synthetic Zipf streams.
 
-On this CPU container the mesh is 1x1; the same script drives the
+The engine resolves param/opt/batch shardings from the logical-axis rule
+tables, donates the TrainState through the jitted step, and microbatches
+when ``--accum-steps k`` > 1.  ``--ckpt``/``--resume`` round-trip the FULL
+TrainState (params + optimizer moments + step counter + rng stream).
+
+On this CPU container the default mesh is 1x1; the same script drives the
 production mesh on real hardware (``--mesh pod|multipod``).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch domst --watersheds 4 --epochs 3
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke --steps 20
+  PYTHONPATH=src python -m repro.launch.train --arch domst --mode stacked --accum-steps 4
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
-import os
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import checkpoint as ckpt
 from repro.configs import TrainConfig, get_config, smoke_variant
 from repro.core import domst
 from repro.data.pipeline import InputPipeline, make_training_windows, train_test_split
 from repro.data.synthetic_hydro import generate_all_watersheds
 from repro.data.tokens import synthetic_token_batch
+from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.metrics import Meter
 from repro.models import transformer as tfm
-from repro.optim import make_optimizer
+from repro.train import Engine
+
+
+def _as_jnp(batch) -> dict:
+    return {k: jnp.asarray(v) for k, v in batch.items()}
+
+
+def _make_mesh(name: str):
+    if name == "host":
+        return make_host_mesh()
+    return make_production_mesh(multi_pod=name == "multipod")
 
 
 def train_domst(args) -> dict:
     cfg = get_config(args.arch)
     tc = TrainConfig(learning_rate=args.lr, total_steps=args.steps or 2000,
-                     warmup_steps=50)
+                     warmup_steps=50, grad_accum=args.accum_steps)
     data = generate_all_watersheds(args.watersheds, num_days=args.days)
     windows = [make_training_windows(w) for w in data.values()]
     ip = InputPipeline(windows, batch_size=args.batch_size, seed=args.seed)
     meter = Meter()
+    mesh = _make_mesh(args.mesh)
 
     if args.mode == "stacked":          # IP-D: all watersheds per step
-        params = domst.init_stacked(cfg, jax.random.key(args.seed),
-                                    len(windows))
-        opt_init, _ = make_optimizer(tc)
-        opt = jax.vmap(opt_init)(params)
-        step = domst.make_stacked_train_step(cfg, tc)
-        for epoch in range(args.epochs):
+        engine = Engine.for_domst(cfg, tc, mesh=mesh, stacked=True)
+        state = engine.init_state(
+            jax.random.key(args.seed),
+            domst.init_stacked(cfg, jax.random.key(args.seed), len(windows)))
+        epoch0 = 0
+        if args.resume:
+            state = engine.restore(args.resume, state)
+            start = int(state.step)
+            # continue the run, don't replay it: extend the schedule
+            # horizon past the restored step (else post-warmup LR decays
+            # to 0 immediately) and advance the epoch stream so the
+            # shuffles yield unseen batch orderings
+            epoch0 = start // max(ip.steps_per_epoch(), 1)
+            tc = dataclasses.replace(tc, total_steps=start + tc.total_steps)
+            engine = Engine.for_domst(cfg, tc, mesh=mesh, stacked=True)
+        for epoch in range(epoch0, epoch0 + args.epochs):
             for batch in ip.stacked_batches(epoch):
-                b = {k: jnp.asarray(v) for k, v in batch.items()}
-                params, opt, m = step(params, opt, b)
+                state, m = engine.step(state, _as_jnp(batch))
             meter.update(loss=float(jnp.mean(m["loss"])))
             print(f"epoch {epoch} mean loss {meter.last('loss'):.4f} "
                   f"({meter.elapsed():.1f}s)", flush=True)
+        plist = [jax.tree.map(lambda x, i=i: x[i], state.params)
+                 for i in range(len(windows))]
     else:                               # sequential: one watershed at a time
-        step = domst.make_train_step(cfg, tc)
-        opt_init, _ = make_optimizer(tc)
-        all_params = []
+        if args.resume or args.ckpt:
+            raise SystemExit(
+                "--ckpt/--resume are not supported with --mode sequential "
+                "(that mode trains one TrainState per watershed); use "
+                "--mode stacked to checkpoint or resume a run")
+        engine = Engine.for_domst(cfg, tc, mesh=mesh)
+        plist = []
         for w in windows:
-            params = domst.init(cfg, jax.random.fold_in(
-                jax.random.key(args.seed), w.watershed_id))
-            opt = opt_init(params)
+            key = jax.random.fold_in(jax.random.key(args.seed),
+                                     w.watershed_id)
+            state = engine.init_state(key, domst.init(cfg, key))
             for epoch in range(args.epochs):
                 for batch in ip.batches(w, epoch):
-                    b = {k: jnp.asarray(v) for k, v in batch.items()}
-                    params, opt, m = step(params, opt, b)
-            all_params.append(params)
+                    state, m = engine.step(state, _as_jnp(batch))
+            plist.append(state.params)
             print(f"watershed {w.watershed_id} loss {float(m['loss']):.4f} "
                   f"({meter.elapsed():.1f}s)", flush=True)
-        params = all_params
 
     # evaluate NSE per watershed
     nses = []
-    plist = (params if isinstance(params, list)
-             else [jax.tree.map(lambda x, i=i: x[i], params)
-                   for i in range(len(windows))])
     for p, w in zip(plist, windows):
         _, te = train_test_split(w)
-        ev = domst.evaluate(p, cfg, {k: jnp.asarray(v) for k, v in te.items()})
+        ev = domst.evaluate(p, cfg, _as_jnp(te))
         nses.append(float(ev["nse"]))
     result = {"arch": args.arch, "mode": args.mode,
+              "accum_steps": args.accum_steps,
               "mean_nse": float(np.mean(nses)), "nse": nses,
               "wall_s": meter.elapsed()}
     print(json.dumps(result, indent=2))
-    if args.ckpt:
-        ckpt.save(args.ckpt, plist[0])
+    if args.ckpt:                       # stacked only (guarded above)
+        engine.save(args.ckpt, state)   # the full multi-replica TrainState
         print("saved", args.ckpt)
     return result
 
@@ -100,35 +128,40 @@ def train_lm(args) -> dict:
     if args.smoke:
         cfg = smoke_variant(cfg)
     tc = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
-                     warmup_steps=max(args.steps // 10, 1), remat="block")
+                     warmup_steps=max(args.steps // 10, 1), remat="block",
+                     grad_accum=args.accum_steps)
+    mesh = _make_mesh(args.mesh)
+    engine = Engine.for_lm(cfg, tc, mesh=mesh)
     params = tfm.init(cfg, jax.random.key(args.seed))
     n_params = sum(x.size for x in jax.tree.leaves(params))
     print(f"{cfg.name}: {n_params/1e6:.1f}M params")
-    opt_init, opt_update = make_optimizer(tc)
-    opt = opt_init(params)
-
-    @jax.jit
-    def step(params, opt, batch):
-        (loss, metrics), grads = jax.value_and_grad(
-            lambda p: tfm.lm_loss(p, cfg, batch), has_aux=True)(params)
-        params, opt, om = opt_update(params, grads, opt)
-        return params, opt, {**metrics, **om, "loss": loss}
+    state = engine.init_state(jax.random.key(args.seed), params)
+    start = 0
+    if args.resume:
+        state = engine.restore(args.resume, state)
+        start = int(state.step)
+        # continue, don't replay: extend the schedule horizon past the
+        # restored step (else the cosine/linear LR is already 0) and
+        # offset the synthetic stream so resumed steps see fresh batches
+        tc = dataclasses.replace(tc, total_steps=start + args.steps)
+        engine = Engine.for_lm(cfg, tc, mesh=mesh)
 
     meter = Meter()
     losses = []
     for i in range(args.steps):
-        batch = {k: jnp.asarray(v) for k, v in synthetic_token_batch(
-            cfg, args.batch_size, args.seq_len, seed=args.seed + i).items()}
-        params, opt, m = step(params, opt, batch)
+        batch = _as_jnp(synthetic_token_batch(
+            cfg, args.batch_size, args.seq_len, seed=args.seed + start + i))
+        state, m = engine.step(state, batch)
         losses.append(float(m["loss"]))
         if i % max(args.steps // 10, 1) == 0:
             print(f"step {i:5d} loss {losses[-1]:.4f} "
                   f"({meter.elapsed():.1f}s)", flush=True)
     result = {"arch": cfg.name, "first_loss": losses[0],
-              "last_loss": losses[-1], "wall_s": meter.elapsed()}
+              "last_loss": losses[-1], "steps": int(state.step),
+              "wall_s": meter.elapsed()}
     print(json.dumps(result))
     if args.ckpt:
-        ckpt.save(args.ckpt, params)
+        engine.save(args.ckpt, state)
         print("saved", args.ckpt)
     return result
 
@@ -147,7 +180,16 @@ def main() -> None:
     ap.add_argument("--days", type=int, default=400)
     ap.add_argument("--mode", choices=("stacked", "sequential"),
                     default="stacked")
-    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--mesh", choices=("host", "pod", "multipod"),
+                    default="host",
+                    help="host: 1x1 CPU mesh; pod/multipod: the production "
+                         "TPU meshes (need 256/512 devices)")
+    ap.add_argument("--accum-steps", type=int, default=1,
+                    help="gradient-accumulation microbatches per step")
+    ap.add_argument("--ckpt", default="",
+                    help="save the full TrainState here after training")
+    ap.add_argument("--resume", default="",
+                    help="restore a TrainState checkpoint before training")
     args = ap.parse_args()
     if args.arch.startswith("domst"):
         train_domst(args)

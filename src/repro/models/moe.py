@@ -24,6 +24,18 @@ from repro.configs.base import ModelConfig, MoEConfig
 from repro.distributed.sharding import ParamFactory, constrain
 from repro.models.mlp import _act, mlp_block, mlp_params
 
+try:                                  # newer jax: top-level export
+    from jax import shard_map
+except ImportError:                   # jax 0.4.x/0.5.x
+    from jax.experimental.shard_map import shard_map
+# the replication-check kwarg was renamed check_rep -> check_vma
+# independently of where shard_map is exported, so probe the signature
+import inspect as _inspect
+_SHARD_MAP_KW = (
+    {"check_vma": False}
+    if "check_vma" in _inspect.signature(shard_map).parameters
+    else {"check_rep": False})
+
 
 def moe_params(mk: ParamFactory, cfg: ModelConfig):
     m = cfg.moe
@@ -118,7 +130,6 @@ def moe_block_sharded(params, cfg: ModelConfig, x: jax.Array, mesh):
     exactly the paper's spatial->temporal head hand-off, expert-parallel.
     """
     m = cfg.moe
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
     axis_names = mesh.axis_names
     batch_ax = tuple(a for a in ("pod", "data") if a in axis_names)
@@ -184,7 +195,7 @@ def moe_block_sharded(params, cfg: ModelConfig, x: jax.Array, mesh):
         local_fn, mesh=mesh,
         in_specs=(wspec, xspec),
         out_specs=(xspec, P()),
-        check_vma=False,
+        **_SHARD_MAP_KW,
     )(dict(params), x)
     return y, aux
 

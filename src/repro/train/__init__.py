@@ -1,0 +1,4 @@
+from repro.train.engine import Engine  # noqa: F401
+from repro.train.state import (  # noqa: F401
+    TrainState, advance_rng, new_train_state, state_axes,
+)

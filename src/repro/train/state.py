@@ -1,0 +1,89 @@
+"""TrainState: the single pytree the training engine owns.
+
+Everything a run needs to resume — parameters, optimizer state, the engine
+step counter and the PRNG stream — travels through the jitted step as one
+donated pytree, is sharded by one structurally-matched logical-spec tree
+(see :func:`state_axes`) and is checkpointed as one file.
+
+The RNG is stored as raw key *data* (uint32) rather than a typed key array
+so the whole state round-trips through the .npz checkpointer; wrap with
+``jax.random.wrap_key_data`` at use sites.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.optim import OptState, make_optimizer
+
+Axes = Tuple
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: OptState
+    step: jax.Array          # engine-level step counter, scalar int32
+    rng: jax.Array           # PRNG key data (uint32); (n, 2) when stacked
+
+
+def is_axes(x: Any) -> bool:
+    """True for a logical-axes tuple leaf (the ParamFactory spec leaves)."""
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+def new_train_state(params: Any, tc: TrainConfig, key: jax.Array, *,
+                    stacked: bool = False) -> TrainState:
+    """Fresh state around ``params``.
+
+    ``stacked=True`` treats the leading param axis as the watershed/replica
+    axis (paper Fig. 2a): optimizer state is built per replica and each
+    replica gets its own PRNG stream.
+    """
+    opt_init, _ = make_optimizer(tc)
+    if stacked:
+        n = jax.tree.leaves(params)[0].shape[0]
+        opt = jax.vmap(opt_init)(params)
+        rng = jax.random.key_data(jax.random.split(key, n))
+    else:
+        # key_data ALIASES the caller's key buffer — copy, or the engine's
+        # donated step would invalidate the caller's key array
+        rng = jnp.array(jax.random.key_data(key))
+        opt = opt_init(params)
+    return TrainState(params=params, opt_state=opt,
+                      step=jnp.zeros((), jnp.int32), rng=rng)
+
+
+def advance_rng(rng: jax.Array) -> jax.Array:
+    """Next key(s) in the per-state PRNG stream (key data in, key data out)."""
+    def one(r):
+        return jax.random.key_data(
+            jax.random.fold_in(jax.random.wrap_key_data(r), 1))
+    return jax.vmap(one)(rng) if rng.ndim == 2 else one(rng)
+
+
+def state_axes(param_axes: Any, tc: TrainConfig, *,
+               stacked: bool = False) -> TrainState:
+    """Logical-axes tree structurally matching a TrainState.
+
+    ``param_axes`` is the ParamFactory spec tree for ONE replica; in stacked
+    mode every leaf gets a leading ``"batch"`` axis — the watershed axis,
+    which the rule table maps onto ``("pod", "data")``.  Optimizer moments
+    mirror the param axes, so fsdp/tensor-parallel placement of a weight
+    automatically places its Adam state.
+    """
+    if stacked:
+        param_axes = jax.tree.map(lambda ax: ("batch",) + tuple(ax),
+                                  param_axes, is_leaf=is_axes)
+    opt_step_ax = ("batch",) if stacked else ()
+    nu_ax = param_axes if tc.optimizer == "adamw" else ()
+    return TrainState(
+        params=param_axes,
+        opt_state=OptState(step=opt_step_ax, mu=param_axes, nu=nu_ax),
+        step=(),
+        rng=("batch", None) if stacked else (None,))
+
+

@@ -97,4 +97,6 @@ def test_decode_ring_buffer_matches_full(rng, key):
                                       window=cfg.window)
         outs.append(o)
     got = jnp.concatenate(outs, axis=1)
-    np.testing.assert_allclose(got, ref, atol=5e-4)
+    # atol sized for XLA reassociation noise across device-count configs
+    # (CI forces 8 host devices); values are O(40), so this is ~5e-5 rel.
+    np.testing.assert_allclose(got, ref, atol=2e-3)

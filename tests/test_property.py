@@ -1,11 +1,17 @@
-"""Hypothesis property tests on system invariants."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+"""Hypothesis property tests on system invariants.
+
+``hypothesis`` is a dev-only dependency (requirements-dev.txt); skip the
+whole module instead of aborting collection when it's absent.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+hnp = pytest.importorskip("hypothesis.extra.numpy")
+st = pytest.importorskip("hypothesis.strategies")
+given, settings = hypothesis.given, hypothesis.settings
 
 from repro.core.partitioner import partition_pixels
 from repro.kernels.conv1d.ref import causal_conv1d_ref

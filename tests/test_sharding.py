@@ -7,9 +7,17 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs import get_config, smoke_variant
 from repro.distributed.sharding import (
-    ParamFactory, make_rules, resolve_pspec, tree_pspecs,
+    ParamFactory, _cache_needs_seq_shard, make_rules, resolve_pspec,
+    tree_pspecs,
 )
 from repro.models import transformer as tfm
+
+
+class _FakeMesh:
+    """Shape-only mesh stand-in (rule resolution needs names + sizes)."""
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape, dtype=object)
 
 
 @pytest.fixture(scope="module")
@@ -48,6 +56,53 @@ def test_resolve_pspec_indivisible_replicates(monkeypatch):
     # no duplicate mesh axes across dims
     spec = resolve_pspec(("batch", "batch"), (32, 32), FakeMesh, rules)
     assert spec == P("data", None)
+
+
+def test_resolve_pspec_tuple_assignment_divisibility():
+    """A ("pod","data") multi-axis assignment needs divisibility by the
+    PRODUCT of the axis sizes; otherwise the dim replicates."""
+    mesh = _FakeMesh((2, 8, 4), ("pod", "data", "model"))
+    rules = {"batch": ("pod", "data")}
+    assert resolve_pspec(("batch",), (32,), mesh, rules) == P(("pod", "data"))
+    assert resolve_pspec(("batch",), (24,), mesh, rules) == P(None)   # 24 % 16
+    # unknown logical axes and None entries replicate
+    assert resolve_pspec((None, "nosuch"), (8, 8), mesh, rules) == P(None, None)
+
+
+def test_fsdp_embed_rule_resolution():
+    """fsdp=True is the parameter-rule variant: the embed dim shards over
+    the data axes (both of them on a pod mesh), and indivisible embed dims
+    still fall back to replication."""
+    mesh2 = _FakeMesh((4, 2), ("data", "model"))
+    r = make_rules(get_config("olmo-1b"), mesh=mesh2, fsdp=True)
+    assert r["embed"] == "data"
+    assert resolve_pspec(("embed", "ffn"), (64, 8), mesh2, r) \
+        == P("data", "model")
+    assert resolve_pspec(("embed",), (6,), mesh2, r) == P(None)       # 6 % 4
+    # pod mesh: embed shards over the combined ("pod", "data") axes
+    mesh3 = _FakeMesh((2, 8, 4), ("pod", "data", "model"))
+    r3 = make_rules(get_config("olmo-1b"), mesh=mesh3, fsdp=True)
+    assert r3["embed"] == ("pod", "data")
+    # activation rules are untouched by the variant
+    assert make_rules(get_config("olmo-1b"), mesh=mesh3)["embed"] is None
+
+
+def test_cache_needs_seq_shard():
+    """KV-cache seq axis shards over "model" exactly when the KV heads
+    can't: ffn-mode archs always, heads-mode only on indivisibility."""
+    mesh = _FakeMesh((1, 16), ("data", "model"))
+    qwen = get_config("qwen2-1.5b")                 # tp_mode == "ffn"
+    olmo = get_config("olmo-1b")                    # tp_mode == "heads"
+    assert _cache_needs_seq_shard(qwen, mesh, "ffn") is True
+    assert _cache_needs_seq_shard(None, None, "heads") is False
+    # olmo-1b: kv_heads=16 divides a 16-way model axis -> no seq shard
+    assert _cache_needs_seq_shard(olmo, mesh, "heads") is False
+    # 12-way model axis: 16 % 12 != 0 -> the cache must shard on seq
+    mesh12 = _FakeMesh((1, 12), ("data", "model"))
+    assert _cache_needs_seq_shard(olmo, mesh12, "heads") is True
+    # and make_rules threads the result into the rule table
+    assert make_rules(olmo, mesh=mesh12)["cache_seq"] == "model"
+    assert make_rules(olmo, mesh=mesh)["cache_seq"] is None
 
 
 def test_param_specs_align_with_params(key):
