@@ -1,0 +1,144 @@
+"""Input-pipeline benchmark (paper Fig. 2a): steps/sec with the synchronous
+host loop vs the ShardedLoader's background prefetch.
+
+For each drive path (Dom-ST stacked/IP-D and the smoke LM token stream)
+the SAME engine and batch stream are driven twice — ``prefetch=0``
+(host windowing + device_put on the step's critical path, the pre-PR-2
+behavior) and ``prefetch=2`` (double-buffered background thread) — and
+steps/sec are recorded to ``BENCH_PR2.json``:
+
+    python -m benchmarks.loader_bench [--smoke] [--out BENCH_PR2.json]
+
+``--smoke`` shrinks sizes for CI; the numbers are honest either way (on a
+shared-core CPU container the overlap win is modest — the bench exists so
+the trajectory is tracked, and so real hardware has a ready measurement).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+
+def _steps_per_sec(engine, state, source, *, prefetch: int, num_steps: int,
+                   start_step: int = 0):
+    from repro.data.loader import ShardedLoader
+    loader = ShardedLoader(source, engine, prefetch=prefetch,
+                           start_step=start_step, num_steps=num_steps)
+    n = 0
+    t0 = time.perf_counter()
+    for batch in loader:
+        state, m = engine.step(state, batch)
+        n += 1
+    jax.block_until_ready(m["loss"])
+    dt = time.perf_counter() - t0
+    return state, n / dt
+
+
+def bench_domst(*, num_watersheds: int, days: int, batch_size: int,
+                epochs: int) -> dict:
+    from repro.configs import TrainConfig, get_config
+    from repro.core import domst
+    from repro.data import generate_all_watersheds, make_training_windows
+    from repro.data.pipeline import InputPipeline, StackedSource
+    from repro.train import Engine
+
+    cfg = get_config("domst")
+    tc = TrainConfig(learning_rate=1e-3, total_steps=10_000, warmup_steps=50)
+    data = generate_all_watersheds(num_watersheds, num_days=days)
+    windows = [make_training_windows(w) for w in data.values()]
+    ip = InputPipeline(windows, batch_size=batch_size, seed=0)
+    source = StackedSource(ip)
+    engine = Engine.for_domst(cfg, tc, stacked=True)
+    state = engine.init_state(
+        jax.random.key(0),
+        domst.init_stacked(cfg, jax.random.key(0), len(windows)))
+    n = epochs * source.steps_per_epoch
+    # warmup epoch compiles the step and pages the windows in
+    state, _ = _steps_per_sec(engine, state, source, prefetch=0,
+                              num_steps=source.steps_per_epoch)
+    # best-of-2 per mode, alternating, to damp scheduler noise on small hosts
+    sync = pre = 0.0
+    step0 = source.steps_per_epoch
+    for _ in range(2):
+        state, s = _steps_per_sec(engine, state, source, prefetch=0,
+                                  num_steps=n, start_step=step0)
+        state, p = _steps_per_sec(engine, state, source, prefetch=2,
+                                  num_steps=n, start_step=step0 + n)
+        sync, pre, step0 = max(sync, s), max(pre, p), step0 + 2 * n
+    return {"path": "domst_stacked", "num_watersheds": num_watersheds,
+            "batch_size": batch_size, "steps": n,
+            "sync_steps_per_s": round(sync, 3),
+            "prefetch_steps_per_s": round(pre, 3),
+            "speedup": round(pre / sync, 3)}
+
+
+def bench_lm(*, arch: str, batch_size: int, seq_len: int, steps: int) -> dict:
+    from repro.configs import TrainConfig, get_config, smoke_variant
+    from repro.data.tokens import TokenSource
+    from repro.models import transformer as tfm
+    from repro.train import Engine
+
+    cfg = smoke_variant(get_config(arch))
+    tc = TrainConfig(learning_rate=1e-3, total_steps=10_000,
+                     warmup_steps=10, remat="block")
+    engine = Engine.for_lm(cfg, tc)
+    state = engine.init_state(jax.random.key(0), tfm.init(cfg, jax.random.key(0)))
+    source = TokenSource(cfg, batch_size, seq_len, seed=0)
+    state, _ = _steps_per_sec(engine, state, source, prefetch=0, num_steps=3)
+    sync = pre = 0.0
+    step0 = 3
+    for _ in range(2):
+        state, s = _steps_per_sec(engine, state, source, prefetch=0,
+                                  num_steps=steps, start_step=step0)
+        state, p = _steps_per_sec(engine, state, source, prefetch=2,
+                                  num_steps=steps, start_step=step0 + steps)
+        sync, pre, step0 = max(sync, s), max(pre, p), step0 + 2 * steps
+    return {"path": "lm_smoke", "arch": cfg.name, "batch_size": batch_size,
+            "seq_len": seq_len, "steps": steps,
+            "sync_steps_per_s": round(sync, 3),
+            "prefetch_steps_per_s": round(pre, 3),
+            "speedup": round(pre / sync, 3)}
+
+
+def run(*, smoke: bool = False) -> dict:
+    if smoke:
+        rows = [bench_domst(num_watersheds=3, days=160, batch_size=16,
+                            epochs=2),
+                bench_lm(arch="qwen2-1.5b", batch_size=4, seq_len=64,
+                         steps=10)]
+    else:
+        rows = [bench_domst(num_watersheds=8, days=400, batch_size=32,
+                            epochs=3),
+                bench_lm(arch="qwen2-1.5b", batch_size=8, seq_len=128,
+                         steps=30)]
+    return {"bench": "loader_prefetch_vs_sync", "smoke": smoke,
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(), "rows": rows}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI")
+    ap.add_argument("--out", default="BENCH_PR2.json")
+    args = ap.parse_args()
+    res = run(smoke=args.smoke)
+    for r in res["rows"]:
+        print(f"{r['path']}: sync {r['sync_steps_per_s']} steps/s, "
+              f"prefetch {r['prefetch_steps_per_s']} steps/s "
+              f"({r['speedup']}x)", flush=True)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+        f.write("\n")
+    print("wrote", args.out)
+
+
+if __name__ == "__main__":
+    main()

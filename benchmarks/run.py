@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * fig3_*    — paper Fig. 3 (NSE: Singlehead / Singlehead(+P) / Dom-ST)
   * table1_*  — paper Table 1 (sequential vs IP-D wall time + speedup)
   * kernel_*  — Pallas kernel micro-benches vs jnp oracle
+  * loader_*  — input-pipeline steps/sec, sync loop vs ShardedLoader prefetch
   * roofline_* — summary of the dry-run roofline terms (if results exist)
 
 Full-scale (23-watershed) variants: ``python -m benchmarks.fig3_nse --full``
@@ -53,6 +54,16 @@ def bench_kernels() -> None:
         emit(f"kernel_{name}", us, derived)
 
 
+def bench_loader() -> None:
+    from benchmarks import loader_bench
+    res = loader_bench.run(smoke=True)
+    for r in res["rows"]:
+        emit(f"loader_{r['path']}", 1e6 / max(r["prefetch_steps_per_s"], 1e-9),
+             f"sync={r['sync_steps_per_s']}steps/s;"
+             f"prefetch={r['prefetch_steps_per_s']}steps/s;"
+             f"speedup={r['speedup']}x")
+
+
 def bench_roofline() -> None:
     from benchmarks import roofline
     rows = roofline.load_all()
@@ -72,6 +83,7 @@ def main() -> None:
     bench_kernels()
     bench_fig3()
     bench_table1()
+    bench_loader()
     bench_roofline()
 
 

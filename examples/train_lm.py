@@ -12,10 +12,10 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import TrainConfig, get_config, smoke_variant
-from repro.data.tokens import synthetic_token_batch
+from repro.data.loader import ShardedLoader
+from repro.data.tokens import TokenSource
 from repro.metrics import Meter
 from repro.models import transformer as tfm
 from repro.train import Engine
@@ -47,15 +47,18 @@ def main():
                      warmup_steps=args.steps // 10, remat="block")
     # The unified engine: mesh-sharded via the logical-axis rules, state
     # donated through the jitted step, microbatched when --accum-steps > 1.
+    # The ShardedLoader assembles + device_puts token batches two steps
+    # ahead on a background thread (paper Fig. 2a "I.P.").
     engine = Engine.for_lm(cfg, tc, accum_steps=args.accum_steps)
     state = engine.init_state(jax.random.key(0), params)
 
     meter = Meter()
-    for i in range(args.steps):
-        b = {k: jnp.asarray(v) for k, v in synthetic_token_batch(
-            cfg, args.batch, args.seq, seed=i).items()}
+    loader = ShardedLoader(TokenSource(cfg, args.batch, args.seq),
+                           engine, prefetch=2, num_steps=args.steps)
+    for b in loader:
         state, m = engine.step(state, b)
         meter.update(loss=float(m["loss"]))
+        i = loader.cursor - 1
         if i % max(args.steps // 15, 1) == 0:
             print(f"step {i:4d}  loss {meter.last('loss'):.4f}  "
                   f"({meter.elapsed():.0f}s)", flush=True)

@@ -87,6 +87,13 @@ def evaluate(params, cfg: ModelConfig, batch) -> Dict[str, jax.Array]:
             "qhat": qhat}
 
 
+def eval_metrics(params, cfg: ModelConfig, batch) -> Dict[str, jax.Array]:
+    """``evaluate`` minus the per-sample qhat series — the scalar payload the
+    engine's periodic ``eval_step`` logs (vmapped per watershed when stacked)."""
+    ev = evaluate(params, cfg, batch)
+    return {"nse": ev["nse"], "mse": ev["mse"]}
+
+
 # ---------------------------------------------------------------------------
 # Train steps — thin veneers over the unified engine (repro/train/).
 # Donation is off here because callers of this seed-era signature own the

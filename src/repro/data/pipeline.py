@@ -8,6 +8,7 @@ execution mode measured in Table 1.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Dict, Iterator, List, Sequence, Tuple
 
@@ -48,18 +49,43 @@ def make_training_windows(ws: WatershedData, window: int = 30
     )
 
 
+def _pack(w: WatershedWindows, sl) -> Dict[str, np.ndarray]:
+    """The batch dict for an index array / slice into ``w``'s windows."""
+    n = len(w.discharge[sl])
+    return {
+        "precip": w.precip[sl],
+        "target_day": w.target_day[sl],
+        "dist": np.broadcast_to(w.dist, (n, len(w.dist))).copy(),
+        "discharge": w.discharge[sl],
+    }
+
+
 def train_test_split(w: WatershedWindows, test_frac: float = 0.2
                      ) -> Tuple[Dict[str, np.ndarray], Dict[str, np.ndarray]]:
     n = len(w.discharge)
     cut = int(n * (1 - test_frac))
-    def pack(sl):
-        return {
-            "precip": w.precip[sl],
-            "target_day": w.target_day[sl],
-            "dist": np.broadcast_to(w.dist, (len(w.discharge[sl]), len(w.dist))).copy(),
-            "discharge": w.discharge[sl],
-        }
-    return pack(slice(0, cut)), pack(slice(cut, n))
+    return _pack(w, slice(0, cut)), _pack(w, slice(cut, n))
+
+
+def train_split(w: WatershedWindows, test_frac: float = 0.2
+                ) -> WatershedWindows:
+    """The first (1 - test_frac) of ``w``'s windows as a WatershedWindows.
+
+    Feed THIS to the training pipeline/sources so the tail that
+    ``train_test_split``/``stacked_test_batch`` report on stays genuinely
+    held out (normalizers and the static dist prior are shared)."""
+    cut = int(len(w.discharge) * (1 - test_frac))
+    return dataclasses.replace(w, precip=w.precip[:cut],
+                               target_day=w.target_day[:cut],
+                               discharge=w.discharge[:cut])
+
+
+def stacked_test_batch(windows: Sequence[WatershedWindows],
+                       test_frac: float = 0.2) -> Dict[str, np.ndarray]:
+    """Held-out batch with a leading watershed axis (W, N_test, ...) for the
+    engine's stacked ``eval_step`` (all watersheds share a window count)."""
+    parts = [train_test_split(w, test_frac)[1] for w in windows]
+    return {k: np.stack([p[k] for p in parts]) for k in parts[0]}
 
 
 class InputPipeline:
@@ -88,20 +114,18 @@ class InputPipeline:
     def num_batches(self, n: int) -> int:
         return max(1, n // self.batch_size)
 
+    def epoch_order(self, w: WatershedWindows, epoch: int) -> np.ndarray:
+        """The deterministic shuffle for (seed, watershed, epoch) — the single
+        definition shared by ``batches`` and the step-indexed DataSources."""
+        rng = np.random.default_rng(self.seed * 997 + w.watershed_id * 31 + epoch)
+        return rng.permutation(len(w.discharge))
+
     def batches(self, w: WatershedWindows, epoch: int
                 ) -> Iterator[Dict[str, np.ndarray]]:
         """Shuffled minibatches for one watershed."""
-        rng = np.random.default_rng(self.seed * 997 + w.watershed_id * 31 + epoch)
-        n = len(w.discharge)
-        order = rng.permutation(n)
-        for i in range(self.num_batches(n)):
-            sl = order[i * self.batch_size:(i + 1) * self.batch_size]
-            yield {
-                "precip": w.precip[sl],
-                "target_day": w.target_day[sl],
-                "dist": np.broadcast_to(w.dist, (len(sl), len(w.dist))).copy(),
-                "discharge": w.discharge[sl],
-            }
+        order = self.epoch_order(w, epoch)
+        for i in range(self.num_batches(len(w.discharge))):
+            yield _pack(w, order[i * self.batch_size:(i + 1) * self.batch_size])
 
     def steps_per_epoch(self) -> int:
         """Stacked steps per epoch (bounded by the smallest watershed)."""
@@ -114,3 +138,60 @@ class InputPipeline:
         for _ in range(n_steps):
             parts = [next(it) for it in its]
             yield {k: np.stack([p[k] for p in parts]) for k in parts[0]}
+
+
+# ---------------------------------------------------------------------------
+# Step-indexed DataSources (consumed by repro.data.loader.ShardedLoader)
+# ---------------------------------------------------------------------------
+class WatershedSource:
+    """One watershed's shuffled minibatch stream as a ``DataSource``.
+
+    ``host_batch(step)`` is batch ``step % steps_per_epoch`` of the epoch
+    ``step // steps_per_epoch`` permutation — the exact ordering
+    ``InputPipeline.batches`` yields over successive epochs, but random
+    access by global step, so the stream resumes mid-epoch from a cursor.
+    """
+
+    def __init__(self, ip: InputPipeline, w: WatershedWindows):
+        self.ip = ip
+        self.w = w
+        self.steps_per_epoch = ip.num_batches(len(w.discharge))
+        self._orders: Dict[int, np.ndarray] = {}
+
+    def _order(self, epoch: int) -> np.ndarray:
+        order = self._orders.get(epoch)
+        if order is None:
+            order = self.ip.epoch_order(self.w, epoch)
+            # keep at most two epochs, evicting insertion order (FIFO), so a
+            # prefetcher straddling an epoch boundary never recomputes and a
+            # stale entry can't pin the cache when the source is reused from
+            # an earlier cursor; memory stays bounded
+            if len(self._orders) >= 2:
+                self._orders.pop(next(iter(self._orders)))
+            self._orders[epoch] = order
+        return order
+
+    def batch_at(self, epoch: int, i: int) -> Dict[str, np.ndarray]:
+        bs = self.ip.batch_size
+        return _pack(self.w, self._order(epoch)[i * bs:(i + 1) * bs])
+
+    def host_batch(self, step: int) -> Dict[str, np.ndarray]:
+        epoch, i = divmod(step, self.steps_per_epoch)
+        return self.batch_at(epoch, i)
+
+
+class StackedSource:
+    """All local watersheds stacked on a leading axis (IP-D) as a
+    ``DataSource``: step-indexed twin of ``stacked_batches`` — per epoch,
+    batches 0..steps_per_epoch-1 of every watershed's own permutation,
+    stacked to (W, B, ...)."""
+
+    def __init__(self, ip: InputPipeline):
+        self.ip = ip
+        self.steps_per_epoch = ip.steps_per_epoch()
+        self._subs = [WatershedSource(ip, w) for w in ip.windows]
+
+    def host_batch(self, step: int) -> Dict[str, np.ndarray]:
+        epoch, i = divmod(step, self.steps_per_epoch)
+        parts = [s.batch_at(epoch, i) for s in self._subs]
+        return {k: np.stack([p[k] for p in parts]) for k in parts[0]}

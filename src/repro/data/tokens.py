@@ -49,3 +49,24 @@ def synthetic_token_batch(cfg: ModelConfig, batch: int, seq_len: int,
                 "targets": toks[:, 1:]}
     toks = _zipf_tokens(rng, (batch, seq_len + 1), cfg.vocab_size)
     return {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+
+
+class TokenSource:
+    """Endless synthetic token stream as a ``DataSource`` for the
+    ShardedLoader: the batch at global step ``i`` is seeded ``seed + i``,
+    so the step counter is the resumable stream cursor (restoring a
+    checkpoint at step N and restarting the source there replays exactly
+    the continuation an uninterrupted run would have produced)."""
+
+    steps_per_epoch = None
+
+    def __init__(self, cfg: ModelConfig, batch_size: int, seq_len: int, *,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.batch_size = batch_size
+        self.seq_len = seq_len
+        self.seed = seed
+
+    def host_batch(self, step: int) -> Dict[str, np.ndarray]:
+        return synthetic_token_batch(self.cfg, self.batch_size, self.seq_len,
+                                     seed=self.seed + step)

@@ -1,7 +1,9 @@
 """Training launcher.
 
 Two drive modes, matching the paper's two layers of the system, both
-running through the unified mesh-sharded engine (``repro/train/``):
+running through the unified mesh-sharded engine (``repro/train/``) and
+fed by the async sharded input pipeline (``repro/data/loader.py``, the
+paper's I.P. in Fig. 2a):
 
   * ``--arch domst*``  — multi-watershed Dom-ST training on the synthetic
     hydrology dataset with the paper's I.P. distribution (sequential or
@@ -11,8 +13,18 @@ running through the unified mesh-sharded engine (``repro/train/``):
 
 The engine resolves param/opt/batch shardings from the logical-axis rule
 tables, donates the TrainState through the jitted step, and microbatches
-when ``--accum-steps k`` > 1.  ``--ckpt``/``--resume`` round-trip the FULL
-TrainState (params + optimizer moments + step counter + rng stream).
+when ``--accum-steps k`` > 1.  The :class:`ShardedLoader` prefetches
+``--prefetch`` batches ahead on a background thread (device_put under the
+same rule tables), so the step never waits on host windowing; every
+``--eval-interval`` steps the engine evaluates the live sharded state on a
+held-out source (``Engine.eval_step`` — per-watershed NSE for Dom-ST,
+held-out loss for LMs) without pulling params to host.
+
+``--ckpt``/``--resume`` round-trip the FULL TrainState (params + optimizer
+moments + step counter + rng stream); the restored step counter doubles as
+the loader's stream cursor, so a resumed run continues the batch stream
+exactly where it stopped — mid-epoch included, identically for the Dom-ST
+and LM paths.
 
 On this CPU container the default mesh is 1x1; the same script drives the
 production mesh on real hardware (``--mesh pod|multipod``).
@@ -34,17 +46,21 @@ import numpy as np
 
 from repro.configs import TrainConfig, get_config, smoke_variant
 from repro.core import domst
-from repro.data.pipeline import InputPipeline, make_training_windows, train_test_split
+from repro.data.loader import ShardedLoader
+from repro.data.pipeline import (
+    InputPipeline, StackedSource, WatershedSource, make_training_windows,
+    stacked_test_batch, train_split, train_test_split,
+)
 from repro.data.synthetic_hydro import generate_all_watersheds
-from repro.data.tokens import synthetic_token_batch
+from repro.data.tokens import TokenSource, synthetic_token_batch
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.metrics import Meter
 from repro.models import transformer as tfm
 from repro.train import Engine
 
-
-def _as_jnp(batch) -> dict:
-    return {k: jnp.asarray(v) for k, v in batch.items()}
+# held-out token batches are seeded far outside the training stream's
+# ``seed + step`` range so eval data never aliases a training batch
+EVAL_SEED_OFFSET = 2**31
 
 
 def _make_mesh(name: str):
@@ -59,7 +75,10 @@ def train_domst(args) -> dict:
                      warmup_steps=50, grad_accum=args.accum_steps)
     data = generate_all_watersheds(args.watersheds, num_days=args.days)
     windows = [make_training_windows(w) for w in data.values()]
-    ip = InputPipeline(windows, batch_size=args.batch_size, seed=args.seed)
+    # train only on the leading split; the tail that eval_step scores
+    # (stacked_test_batch / train_test_split) stays genuinely held out
+    ip = InputPipeline([train_split(w) for w in windows],
+                       batch_size=args.batch_size, seed=args.seed)
     meter = Meter()
     mesh = _make_mesh(args.mesh)
 
@@ -68,25 +87,36 @@ def train_domst(args) -> dict:
         state = engine.init_state(
             jax.random.key(args.seed),
             domst.init_stacked(cfg, jax.random.key(args.seed), len(windows)))
-        epoch0 = 0
+        start = 0
         if args.resume:
             state = engine.restore(args.resume, state)
             start = int(state.step)
-            # continue the run, don't replay it: extend the schedule
-            # horizon past the restored step (else post-warmup LR decays
-            # to 0 immediately) and advance the epoch stream so the
-            # shuffles yield unseen batch orderings
-            epoch0 = start // max(ip.steps_per_epoch(), 1)
+            # continue the run, don't replay it: the loader cursor picks
+            # the shuffled stream back up at the restored step (mid-epoch
+            # included) and the schedule horizon extends past it (else
+            # post-warmup LR decays to 0 immediately)
             tc = dataclasses.replace(tc, total_steps=start + tc.total_steps)
             engine = Engine.for_domst(cfg, tc, mesh=mesh, stacked=True)
-        for epoch in range(epoch0, epoch0 + args.epochs):
-            for batch in ip.stacked_batches(epoch):
-                state, m = engine.step(state, _as_jnp(batch))
-            meter.update(loss=float(jnp.mean(m["loss"])))
-            print(f"epoch {epoch} mean loss {meter.last('loss'):.4f} "
-                  f"({meter.elapsed():.1f}s)", flush=True)
-        plist = [jax.tree.map(lambda x, i=i: x[i], state.params)
-                 for i in range(len(windows))]
+        source = StackedSource(ip)
+        spe = source.steps_per_epoch
+        held_out = engine.place_batch(stacked_test_batch(windows))
+        loader = ShardedLoader(source, engine, prefetch=args.prefetch,
+                               start_step=start,
+                               num_steps=args.epochs * spe)
+        for batch in loader:
+            state, m = engine.step(state, batch)
+            step = loader.cursor
+            if args.eval_interval and step % args.eval_interval == 0:
+                ev = engine.eval_step(state, held_out)
+                print(f"step {step} eval mean NSE "
+                      f"{float(jnp.mean(ev['nse'])):.4f}", flush=True)
+            if step % spe == 0:         # epoch boundary
+                meter.update(loss=float(jnp.mean(m["loss"])))
+                print(f"epoch {step // spe - 1} mean loss "
+                      f"{meter.last('loss'):.4f} "
+                      f"({meter.elapsed():.1f}s)", flush=True)
+        ev = engine.eval_step(state, held_out)
+        nses = [float(x) for x in np.asarray(ev["nse"])]
     else:                               # sequential: one watershed at a time
         if args.resume or args.ckpt:
             raise SystemExit(
@@ -94,26 +124,25 @@ def train_domst(args) -> dict:
                 "(that mode trains one TrainState per watershed); use "
                 "--mode stacked to checkpoint or resume a run")
         engine = Engine.for_domst(cfg, tc, mesh=mesh)
-        plist = []
-        for w in windows:
+        nses = []
+        for w, tw in zip(windows, ip.windows):   # tw: the train split of w
             key = jax.random.fold_in(jax.random.key(args.seed),
                                      w.watershed_id)
             state = engine.init_state(key, domst.init(cfg, key))
-            for epoch in range(args.epochs):
-                for batch in ip.batches(w, epoch):
-                    state, m = engine.step(state, _as_jnp(batch))
-            plist.append(state.params)
+            source = WatershedSource(ip, tw)
+            loader = ShardedLoader(
+                source, engine, prefetch=args.prefetch,
+                num_steps=args.epochs * source.steps_per_epoch)
+            for batch in loader:
+                state, m = engine.step(state, batch)
+            _, te = train_test_split(w)
+            ev = engine.eval_step(state, engine.place_batch(te))
+            nses.append(float(ev["nse"]))
             print(f"watershed {w.watershed_id} loss {float(m['loss']):.4f} "
-                  f"({meter.elapsed():.1f}s)", flush=True)
+                  f"nse {nses[-1]:.4f} ({meter.elapsed():.1f}s)", flush=True)
 
-    # evaluate NSE per watershed
-    nses = []
-    for p, w in zip(plist, windows):
-        _, te = train_test_split(w)
-        ev = domst.evaluate(p, cfg, _as_jnp(te))
-        nses.append(float(ev["nse"]))
     result = {"arch": args.arch, "mode": args.mode,
-              "accum_steps": args.accum_steps,
+              "accum_steps": args.accum_steps, "prefetch": args.prefetch,
               "mean_nse": float(np.mean(nses)), "nse": nses,
               "wall_s": meter.elapsed()}
     print(json.dumps(result, indent=2))
@@ -140,25 +169,34 @@ def train_lm(args) -> dict:
     if args.resume:
         state = engine.restore(args.resume, state)
         start = int(state.step)
-        # continue, don't replay: extend the schedule horizon past the
-        # restored step (else the cosine/linear LR is already 0) and
-        # offset the synthetic stream so resumed steps see fresh batches
+        # continue, don't replay: the loader resumes the token stream at
+        # the restored step and the schedule horizon extends past it
         tc = dataclasses.replace(tc, total_steps=start + args.steps)
         engine = Engine.for_lm(cfg, tc, mesh=mesh)
 
+    source = TokenSource(cfg, args.batch_size, args.seq_len, seed=args.seed)
+    if args.eval_interval:
+        held_out = engine.place_batch(synthetic_token_batch(
+            cfg, args.batch_size, args.seq_len,
+            seed=args.seed + EVAL_SEED_OFFSET))
+    loader = ShardedLoader(source, engine, prefetch=args.prefetch,
+                           start_step=start, num_steps=args.steps)
     meter = Meter()
     losses = []
-    for i in range(args.steps):
-        batch = _as_jnp(synthetic_token_batch(
-            cfg, args.batch_size, args.seq_len, seed=args.seed + start + i))
+    for batch in loader:
         state, m = engine.step(state, batch)
         losses.append(float(m["loss"]))
+        i = loader.cursor - start - 1
+        if args.eval_interval and loader.cursor % args.eval_interval == 0:
+            ev = engine.eval_step(state, held_out)
+            print(f"step {loader.cursor} eval loss "
+                  f"{float(ev['loss']):.4f}", flush=True)
         if i % max(args.steps // 10, 1) == 0:
             print(f"step {i:5d} loss {losses[-1]:.4f} "
                   f"({meter.elapsed():.1f}s)", flush=True)
     result = {"arch": cfg.name, "first_loss": losses[0],
               "last_loss": losses[-1], "steps": int(state.step),
-              "wall_s": meter.elapsed()}
+              "prefetch": args.prefetch, "wall_s": meter.elapsed()}
     print(json.dumps(result))
     if args.ckpt:
         engine.save(args.ckpt, state)
@@ -186,10 +224,17 @@ def main() -> None:
                          "TPU meshes (need 256/512 devices)")
     ap.add_argument("--accum-steps", type=int, default=1,
                     help="gradient-accumulation microbatches per step")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="loader prefetch depth (batches placed on the mesh "
+                         "ahead of the step; 0 = synchronous host loop)")
+    ap.add_argument("--eval-interval", type=int, default=0,
+                    help="run Engine.eval_step on the held-out source every "
+                         "N steps (0 = final eval only)")
     ap.add_argument("--ckpt", default="",
                     help="save the full TrainState here after training")
     ap.add_argument("--resume", default="",
-                    help="restore a TrainState checkpoint before training")
+                    help="restore a TrainState checkpoint before training "
+                         "(the loader resumes the batch stream at its step)")
     args = ap.parse_args()
     if args.arch.startswith("domst"):
         train_domst(args)

@@ -91,8 +91,10 @@ class Engine:
                  donate: bool = True,
                  rules: Optional[dict] = None,
                  param_rules: Optional[dict] = None,
-                 explicit_shardings: bool = True):
+                 explicit_shardings: bool = True,
+                 eval_fn: Optional[LossFn] = None):
         self.loss_fn = loss_fn
+        self.eval_fn = eval_fn
         self.tc = tc
         self.cfg = cfg
         self.accum = int(accum_steps) if accum_steps else max(tc.grad_accum, 1)
@@ -115,6 +117,7 @@ class Engine:
                       if param_axes is not None else None)
         self._opt_update = make_optimizer(tc)[1]
         self._jit_cache: dict = {}
+        self._bs_cache: dict = {}
         self._wrap_rng: dict = {}
 
     @property
@@ -153,7 +156,8 @@ class Engine:
                    mesh=mesh, param_axes=domst.param_specs(cfg),
                    batch_axes=domst.BATCH_AXES, stacked=stacked,
                    accum_steps=accum_steps, donate=donate,
-                   explicit_shardings=explicit_shardings)
+                   explicit_shardings=explicit_shardings,
+                   eval_fn=lambda p, b: domst.eval_metrics(p, cfg, b))
 
     @classmethod
     def for_lm(cls, cfg: ModelConfig, tc: TrainConfig, *, mesh=None,
@@ -164,10 +168,15 @@ class Engine:
         from repro.launch.steps import batch_axes as lm_batch_axes
         from repro.models import transformer as tfm
         remat = tc.remat != "none"
+
+        def lm_eval(p, b):
+            loss, mets = tfm.lm_loss(p, cfg, b, remat=remat)
+            return {"loss": loss, **mets}
+
         return cls(lambda p, b: tfm.lm_loss(p, cfg, b, remat=remat), tc,
                    cfg=cfg, mesh=mesh, param_axes=tfm.param_specs(cfg),
                    batch_axes=lm_batch_axes(cfg, INPUT_SHAPES["train_4k"]),
-                   accum_steps=accum_steps, donate=donate)
+                   accum_steps=accum_steps, donate=donate, eval_fn=lm_eval)
 
     # -- state lifecycle ---------------------------------------------------
     def init_state(self, key: jax.Array, params: Any) -> TrainState:
@@ -233,6 +242,10 @@ class Engine:
             rng=self._one(ax.rng, state.rng, self.rules))
 
     def batch_shardings(self, batch: Dict[str, jax.Array]) -> Dict[str, Any]:
+        key = tuple(sorted((k, tuple(jnp.shape(v))) for k, v in batch.items()))
+        cached = self._bs_cache.get(key)
+        if cached is not None:
+            return cached
         out = {}
         for k, v in batch.items():
             axes = self.batch_axes.get(k, (None,) * jnp.ndim(v))
@@ -242,7 +255,17 @@ class Engine:
                 axes = ("batch",) + tuple(None if a == "batch" else a
                                           for a in axes)
             out[k] = self._one(axes, v, self.rules)
+        self._bs_cache[key] = out
         return out
+
+    def place_batch(self, batch: Dict[str, Any]) -> Dict[str, jax.Array]:
+        """``jax.device_put`` a host batch onto the mesh under the batch rule
+        table — the ShardedLoader's placement hook, so arrays arrive at
+        ``step``/``eval_step`` already laid out for ``in_shardings`` and the
+        transfer can overlap compute from the prefetch thread."""
+        if not self._explicit:
+            return {k: jnp.asarray(v) for k, v in batch.items()}
+        return jax.device_put(dict(batch), self.batch_shardings(batch))
 
     # -- the step ----------------------------------------------------------
     def _step_fn(self, state: TrainState, batch: Dict[str, jax.Array]):
@@ -289,6 +312,34 @@ class Engine:
                     f"minibatch dim {mb} not divisible by "
                     f"accum_steps={self.accum}")
         jfn = self._get_jit(state, batch)
+        if not self._explicit:
+            return jfn(state, batch)
+        with self.mesh, logical_sharding(self.mesh, self.rules):
+            return jfn(state, batch)
+
+    # -- periodic evaluation on the sharded state --------------------------
+    def _eval_body(self, state: TrainState, batch: Dict[str, jax.Array]):
+        fn = jax.vmap(self.eval_fn) if self.stacked else self.eval_fn
+        return fn(state.params, batch)
+
+    def eval_step(self, state: TrainState, batch: Dict[str, jax.Array]):
+        """Held-out metrics on the LIVE sharded state: no state update, no
+        donation, no host pull of params.  Stacked mode vmaps ``eval_fn``
+        over the leading watershed axis, so e.g. the Dom-ST engine returns
+        per-watershed NSE directly from the mesh."""
+        if self.eval_fn is None:
+            raise ValueError("engine was built without an eval_fn")
+        key = ("eval",) + tuple(sorted((k, tuple(jnp.shape(v)), str(v.dtype))
+                                       for k, v in batch.items()))
+        jfn = self._jit_cache.get(key)
+        if jfn is None:
+            if self._explicit:
+                jfn = jax.jit(self._eval_body,
+                              in_shardings=(self.state_shardings(state),
+                                            self.batch_shardings(batch)))
+            else:
+                jfn = jax.jit(self._eval_body)
+            self._jit_cache[key] = jfn
         if not self._explicit:
             return jfn(state, batch)
         with self.mesh, logical_sharding(self.mesh, self.rules):

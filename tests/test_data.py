@@ -2,7 +2,7 @@
 import numpy as np
 
 from repro.data import generate_all_watersheds, generate_watershed, make_training_windows
-from repro.data.pipeline import InputPipeline, train_test_split
+from repro.data.pipeline import InputPipeline, train_split, train_test_split
 from repro.data.tokens import synthetic_token_batch
 from repro.configs import get_config, smoke_variant
 
@@ -61,6 +61,23 @@ def test_windows_and_split():
     # (both are scaled by the same normalizer -> proportional)
     c = ws.precip[30].sum() / (w.target_day[0].sum() + 1e-9)
     np.testing.assert_allclose(w.target_day[0] * c, ws.precip[30], rtol=1e-4)
+
+
+def test_train_split_excludes_heldout_tail():
+    """Windows fed to training and the test pack from train_test_split must
+    partition the data — the pipeline never sees the held-out tail."""
+    ws = generate_watershed(0, num_days=120)
+    w = make_training_windows(ws, window=30)
+    tw = train_split(w, 0.25)
+    tr, te = train_test_split(w, 0.25)
+    assert len(tw.discharge) == len(tr["discharge"])
+    np.testing.assert_array_equal(tw.precip, tr["precip"])
+    # and the first held-out row is NOT in the training windows
+    assert len(tw.discharge) + len(te["discharge"]) == len(w.discharge)
+    np.testing.assert_array_equal(
+        te["precip"][0], w.precip[len(tw.discharge)])
+    # normalization stats come from the full windows (shared)
+    assert tw.q_mean == w.q_mean and tw.q_std == w.q_std
 
 
 def test_pipeline_sharding_partitions_watersheds():
