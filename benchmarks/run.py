@@ -5,6 +5,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * table1_*  — paper Table 1 (sequential vs IP-D wall time + speedup)
   * kernel_*  — Pallas kernel micro-benches vs jnp oracle
   * loader_*  — input-pipeline steps/sec, sync loop vs ShardedLoader prefetch
+  * serve_*   — inference engine: prefill vs decode tokens/sec, continuous
+                batching vs sequential requests, Dom-ST forecast rate
   * roofline_* — summary of the dry-run roofline terms (if results exist)
 
 Full-scale (23-watershed) variants: ``python -m benchmarks.fig3_nse --full``
@@ -64,6 +66,28 @@ def bench_loader() -> None:
              f"speedup={r['speedup']}x")
 
 
+def bench_serve() -> None:
+    from benchmarks import serve_bench
+    res = serve_bench.run(smoke=True)
+    for r in res["rows"]:
+        if r["path"] == "serve_prefill_vs_decode":
+            emit("serve_prefill_vs_decode",
+                 1e6 / max(r["decode_tok_per_s"], 1e-9),
+                 f"prefill={r['prefill_tok_per_s']}tok/s;"
+                 f"decode={r['decode_tok_per_s']}tok/s")
+        elif r["path"] == "serve_batched_vs_sequential":
+            emit("serve_batched_vs_sequential",
+                 1e6 / max(r["batched_tok_per_s"], 1e-9),
+                 f"seq={r['sequential_tok_per_s']}tok/s;"
+                 f"batched={r['batched_tok_per_s']}tok/s;"
+                 f"speedup={r['speedup']}x")
+        elif r["path"] == "serve_domst_forecast":
+            emit("serve_domst_forecast",
+                 1e6 / max(r["forecasts_per_s"], 1e-9),
+                 f"forecasts_per_s={r['forecasts_per_s']};"
+                 f"horizon={r['horizon_days']}d")
+
+
 def bench_roofline() -> None:
     from benchmarks import roofline
     rows = roofline.load_all()
@@ -84,6 +108,7 @@ def main() -> None:
     bench_fig3()
     bench_table1()
     bench_loader()
+    bench_serve()
     bench_roofline()
 
 

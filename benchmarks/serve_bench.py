@@ -1,0 +1,134 @@
+"""Serving benchmark (PR 3): prefill vs decode throughput through the
+sharded inference engine, and continuous batching vs sequential requests.
+
+For the LM path the SAME engine and request queue are driven twice —
+``slots=1`` (one request at a time to completion, the pre-PR-3 shape) and
+``slots=N`` (continuous batching: fused all-slot decode, EOS eviction,
+in-place slot reuse) — plus the Dom-ST forecast workload, all recorded to
+``BENCH_PR3.json``:
+
+    python -m benchmarks.serve_bench [--smoke] [--out BENCH_PR3.json]
+
+``--smoke`` shrinks sizes for CI; the numbers are honest either way (on a
+shared-core CPU container the batching win is modest — the bench exists
+so the trajectory is tracked, and so real hardware has a ready
+measurement).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+
+def _make_requests(cfg, n, prompt_len, gen, seed=0):
+    from repro.serve import Request
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, max_new=gen,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        prompt_len).astype(np.int32))
+            for i in range(n)]
+
+
+def _run_queue(cfg, params_key, *, slots, requests, prompt_len, gen):
+    """(scheduler stats, wall seconds) for one served queue."""
+    from repro.models import transformer as tfm
+    from repro.serve import InferenceEngine, Scheduler
+
+    engine = InferenceEngine(cfg, slots=slots, max_len=prompt_len + gen)
+    state = engine.init_state(tfm.init(cfg, jax.random.key(params_key)))
+    sched = Scheduler(engine, state)
+    sched.run(_make_requests(cfg, slots, prompt_len, gen))    # compile warmup
+    sched = Scheduler(engine, sched.state)
+    t0 = time.perf_counter()
+    out = sched.run(_make_requests(cfg, requests, prompt_len, gen))
+    wall = time.perf_counter() - t0
+    assert sum(len(g) for g in out.values()) == requests * gen
+    return sched.stats, wall
+
+
+def bench_lm(*, arch: str, slots: int, requests: int, prompt_len: int,
+             gen: int) -> list:
+    from repro.configs import get_config, smoke_variant
+
+    cfg = smoke_variant(get_config(arch))
+    st, batched_s = _run_queue(cfg, 0, slots=slots, requests=requests,
+                               prompt_len=prompt_len, gen=gen)
+    _, seq_s = _run_queue(cfg, 0, slots=1, requests=requests,
+                          prompt_len=prompt_len, gen=gen)
+    tokens = requests * gen
+    return [
+        {"path": "serve_prefill_vs_decode", "arch": cfg.name, "slots": slots,
+         "requests": requests, "prompt_len": prompt_len, "gen": gen,
+         "prefill_tok_per_s": round(
+             st["prefill_tokens"] / max(st["prefill_s"], 1e-9), 1),
+         "decode_tok_per_s": round(
+             st["decode_tokens"] / max(st["decode_s"], 1e-9), 1)},
+        {"path": "serve_batched_vs_sequential", "arch": cfg.name,
+         "slots": slots, "requests": requests, "gen": gen,
+         "batched_tok_per_s": round(tokens / batched_s, 1),
+         "sequential_tok_per_s": round(tokens / seq_s, 1),
+         "speedup": round(seq_s / batched_s, 3)},
+    ]
+
+
+def bench_forecast(*, watersheds: int, days: int) -> dict:
+    from repro.configs import get_config
+    from repro.core import domst
+    from repro.data.pipeline import make_domst_windows, stacked_test_batch
+    from repro.serve import Forecaster
+
+    cfg = get_config("domst")
+    windows = make_domst_windows(watersheds, days)
+    params = domst.init_stacked(cfg, jax.random.key(0), len(windows))
+    fc = Forecaster(cfg)
+    held = stacked_test_batch(windows)
+    params = fc.place_params(params)
+    jax.block_until_ready(fc(params, held)["qhat"])           # compile warmup
+    t0 = time.perf_counter()
+    res = fc(params, held)
+    jax.block_until_ready(res["qhat"])
+    wall = time.perf_counter() - t0
+    horizon = int(held["discharge"].shape[1])
+    return {"path": "serve_domst_forecast", "watersheds": watersheds,
+            "horizon_days": horizon, "wall_s": round(wall, 4),
+            "forecasts_per_s": round(watersheds * horizon / wall, 1)}
+
+
+def run(*, smoke: bool = False) -> dict:
+    if smoke:
+        rows = bench_lm(arch="qwen2-1.5b", slots=4, requests=8,
+                        prompt_len=12, gen=8)
+        rows.append(bench_forecast(watersheds=2, days=120))
+    else:
+        rows = bench_lm(arch="qwen2-1.5b", slots=8, requests=32,
+                        prompt_len=32, gen=24)
+        rows.append(bench_forecast(watersheds=8, days=400))
+    return {"bench": "serve_prefill_decode_batching", "smoke": smoke,
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(), "rows": rows}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small sizes for CI")
+    ap.add_argument("--out", default="BENCH_PR3.json")
+    args = ap.parse_args()
+    res = run(smoke=args.smoke)
+    for r in res["rows"]:
+        print(json.dumps(r), flush=True)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+        f.write("\n")
+    print("wrote", args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,6 @@
-"""Batched serving demo: prefill + KV-cache decode over a request queue,
-on a reduced config of each decodable family (dense / MoE / SSM / hybrid /
-VLM).
+"""Batched serving demo: continuous batching through the sharded inference
+engine on a reduced config of each decodable family (dense / MoE / SSM /
+hybrid / VLM) — ragged prompts, EOS-free budgeted generation, slot reuse.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -18,6 +18,10 @@ class Args:
     batch_size = 3
     prompt_len = 16
     gen = 12
+    max_len = 0
+    eos = -1
+    ragged = True
+    ckpt = ""
     seed = 0
 
 

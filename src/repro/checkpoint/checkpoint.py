@@ -47,11 +47,24 @@ def save(path: str, tree: Any) -> None:
 
 def restore(path: str, example: Any) -> Any:
     """Restore into the structure of ``example`` (shapes must match)."""
+    return restore_subtree(path, example, prefix="")
+
+
+def restore_subtree(path: str, example: Any, prefix: str) -> Any:
+    """Restore the entries under ``prefix/`` into ``example``.
+
+    Lets a consumer rebuild one branch of a larger checkpointed pytree
+    without instantiating the rest — e.g. the serve launcher restores only
+    the ``params`` subtree of a full TrainState checkpoint (skipping the
+    optimizer moments, which can be as large as the model again).
+    ``prefix=""`` restores the whole tree.
+    """
+    pre = f"{prefix}/" if prefix else ""
     with np.load(path) as data:
         paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(example)
         leaves = []
         for p, ex in paths_leaves:
-            key = _path_str(p)
+            key = pre + _path_str(p)
             if key not in data:
                 raise KeyError(f"checkpoint missing '{key}'")
             arr = data[key]

@@ -24,7 +24,7 @@ from repro.core.partitioner import partition_pixels, static_partition
 from repro.core.pixcon import pixcon_block, pixcon_params
 from repro.core.spatial import spatial_block, spatial_params
 from repro.core.temporal import temporal_block, temporal_params
-from repro.distributed.sharding import ParamFactory
+from repro.distributed.sharding import ParamFactory, is_axes
 from repro.metrics.nse import nse
 from repro.optim import make_optimizer
 
@@ -55,6 +55,16 @@ def init(cfg: ModelConfig, key: jax.Array):
 
 def param_specs(cfg: ModelConfig):
     return domst_params(cfg, ParamFactory(mode="spec"))
+
+
+def stacked_param_specs(cfg: ModelConfig):
+    """Spec tree for a stacked multi-watershed replica set: ``param_specs``
+    with a leading ``"batch"`` (watershed -> pod/data) axis on every leaf —
+    the same transform ``train.state_axes`` applies for the stacked
+    TrainState, so the serve-side ``Forecaster`` resolves a checkpointed
+    replica stack to the NamedShardings training used."""
+    return jax.tree.map(lambda ax: ("batch",) + tuple(ax), param_specs(cfg),
+                        is_leaf=is_axes)
 
 
 def forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array]) -> jax.Array:

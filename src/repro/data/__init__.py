@@ -1,7 +1,8 @@
 from repro.data.synthetic_hydro import WatershedData, generate_watershed, generate_all_watersheds  # noqa: F401
 from repro.data.pipeline import (  # noqa: F401
-    InputPipeline, StackedSource, WatershedSource, make_training_windows,
-    stacked_test_batch, train_split, train_test_split,
+    InputPipeline, StackedSource, WatershedSource, make_domst_windows,
+    make_training_windows, stacked_test_batch, train_split,
+    train_test_split,
 )
 from repro.data.tokens import TokenSource, synthetic_token_batch  # noqa: F401
 from repro.data.loader import DataSource, ShardedLoader  # noqa: F401

@@ -29,6 +29,20 @@ class WatershedWindows:
     q_std: float
 
 
+def make_domst_windows(num_watersheds: int, days: int
+                       ) -> List["WatershedWindows"]:
+    """The deterministic synthetic watershed window set.
+
+    Shared by the train and serve launchers: a TrainState checkpoint
+    carries no data, so ``repro.launch.serve`` regenerates the SAME
+    windows (and therefore the same held-out tail) from the same
+    ``(--watersheds, --days)`` arguments — the forecast it reports is
+    scored against exactly the split training evaluated."""
+    from repro.data.synthetic_hydro import generate_all_watersheds
+    data = generate_all_watersheds(num_watersheds, num_days=days)
+    return [make_training_windows(w) for w in data.values()]
+
+
 def make_training_windows(ws: WatershedData, window: int = 30
                           ) -> WatershedWindows:
     T, P = ws.precip.shape

@@ -1,4 +1,5 @@
 from repro.distributed.sharding import (  # noqa: F401
-    ParamFactory, constrain, logical_sharding, make_rules, resolve_pspec,
-    tree_pspecs, tree_shardings,
+    ParamFactory, cache_needs_seq_shard, constrain, is_axes,
+    logical_sharding, make_rules, resolve_pspec, tree_pspecs,
+    tree_shardings,
 )

@@ -33,6 +33,13 @@ Axes = Tuple[Optional[str], ...]
 MeshAxis = Union[None, str, Tuple[str, ...]]
 
 
+def is_axes(x: Any) -> bool:
+    """True for a logical-axes tuple leaf (the ParamFactory spec leaves) —
+    the canonical ``is_leaf`` predicate for traversing spec trees."""
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
 # ---------------------------------------------------------------------------
 # Rule tables
 # ---------------------------------------------------------------------------
@@ -77,12 +84,20 @@ def make_rules(cfg=None, *, mesh: Optional[Mesh] = None,
         # decode KV-cache sequence axis: sharded over model whenever the KV
         # heads can't shard there (ffn-mode archs, or kv_heads % ways != 0)
         # so a 32k cache never replicates 16x.
-        "cache_seq": model if _cache_needs_seq_shard(cfg, mesh, tp) else None,
+        "cache_seq": model if cache_needs_seq_shard(cfg, mesh, tp) else None,
     }
     return rules
 
 
-def _cache_needs_seq_shard(cfg, mesh, tp: str) -> bool:
+def cache_needs_seq_shard(cfg, mesh, tp_mode: Optional[str] = None) -> bool:
+    """True when the decode KV cache must shard its SEQUENCE axis.
+
+    The head axes of a ``ffn``-mode arch (or one whose kv_heads don't
+    divide the model axis) can't shard over "model", so the cache would
+    replicate model-ways times; ``make_rules`` then routes ``cache_seq``
+    onto "model" instead.  Public so the serve engine and its mesh tests
+    can assert which branch a config takes."""
+    tp = tp_mode or (getattr(cfg, "tp_mode", None) or "heads")
     if tp == "ffn":
         return True
     if cfg is None or mesh is None:
@@ -91,6 +106,10 @@ def _cache_needs_seq_shard(cfg, mesh, tp: str) -> bool:
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     ways = sizes.get("model", 1)
     return bool(kv) and kv % ways != 0
+
+
+# back-compat alias (pre-PR-3 tests import the underscored name)
+_cache_needs_seq_shard = cache_needs_seq_shard
 
 
 def resolve_pspec(axes: Axes, shape: Sequence[int], mesh: Mesh,
@@ -183,9 +202,7 @@ def tree_pspecs(spec_tree: Any, shape_tree: Any, mesh: Mesh,
     def _one(axes, arr):
         shape = arr.shape if hasattr(arr, "shape") else arr
         return resolve_pspec(axes, shape, mesh, rules)
-    return jax.tree.map(_one, spec_tree, shape_tree,
-                        is_leaf=lambda x: isinstance(x, tuple) and all(
-                            isinstance(e, (str, type(None))) for e in x))
+    return jax.tree.map(_one, spec_tree, shape_tree, is_leaf=is_axes)
 
 
 def tree_shardings(spec_tree: Any, shape_tree: Any, mesh: Mesh,

@@ -1,88 +1,129 @@
-"""Serving launcher: batched prefill + decode loop with a request queue.
+"""Serving launcher — engine-driven sharded inference with a trained
+checkpoint hand-off.
 
-Demonstrates the inference side of the framework on CPU with a reduced
-config; the identical step functions are what the dry-run lowers for the
-production mesh (decode_32k / long_500k shapes).
+Two drive modes, mirroring ``repro.launch.train`` on the inference side,
+both running through ``repro/serve/``:
+
+  * ``--arch domst*`` — autoregressive peak-discharge forecasting: the
+    stacked multi-watershed params from a ``repro.launch.train --ckpt``
+    file (params subtree only; optimizer moments are never instantiated)
+    roll forward day by day over the held-out forcing windows via
+    :class:`repro.serve.Forecaster`, reporting per-watershed NSE against
+    observed discharge — the paper's headline serving workload;
+  * any ``supports_decode()`` LM arch — continuous batching over an
+    :class:`InferenceEngine`: a jitted donated prefill-insert per request
+    (exact prompt length), one fused all-slot decode step per token, EOS /
+    budget eviction with in-place slot reuse (``repro.serve.Scheduler``).
+    The whole :class:`InferenceState` (params + KV/recurrent cache + slot
+    position counters) is sharded from the ``distributed/sharding.py``
+    rule tables, so the same script drives the production mesh
+    (decode_32k / long_500k shapes) that the dry-run lowers.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
       --requests 8 --prompt-len 24 --gen 16
+  PYTHONPATH=src python -m repro.launch.train --arch domst --ckpt c.npz \
+      --watersheds 4 --days 200 && \
+  PYTHONPATH=src python -m repro.launch.serve --arch domst --ckpt c.npz \
+      --watersheds 4 --days 200
 """
 from __future__ import annotations
 
 import argparse
 import json
 import time
-from dataclasses import dataclass, field
-from typing import List
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import checkpoint as ckpt
 from repro.configs import get_config, smoke_variant
-from repro.data.tokens import synthetic_token_batch
+from repro.core import domst
+from repro.data.pipeline import make_domst_windows, stacked_test_batch
 from repro.models import transformer as tfm
+from repro.serve import Forecaster, InferenceEngine, Request, Scheduler
 
 
-@dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray
-    generated: List[int] = field(default_factory=list)
+def make_requests(cfg, args) -> list:
+    """Deterministic synthetic request queue (ragged lengths if asked)."""
+    rng = np.random.default_rng(args.seed)
+    reqs = []
+    for i in range(args.requests):
+        n = args.prompt_len
+        if args.ragged:
+            n = max(4, args.prompt_len - (i % 4) * 2)
+        extras = {}
+        if cfg.family == "vlm":
+            extras["patches"] = np.zeros(
+                (cfg.num_patches, cfg.frontend_dim), np.float32)
+        reqs.append(Request(
+            rid=i, max_new=args.gen, extras=extras,
+            prompt=rng.integers(0, cfg.vocab_size, n).astype(np.int32)))
+    return reqs
 
 
-def serve(args) -> dict:
+def serve_lm(args) -> dict:
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
     if not cfg.supports_decode():
         raise SystemExit(f"{cfg.name} is encoder-only; no decode path")
     params = tfm.init(cfg, jax.random.key(args.seed))
-    max_len = args.prompt_len + args.gen + (cfg.num_patches or 0)
-
-    prefill = jax.jit(lambda p, b: tfm.prefill(p, cfg, b, max_len=max_len))
-    decode = jax.jit(lambda p, c, b, pos: tfm.decode_step(p, cfg, b, c, pos))
-
-    # request queue -> fixed-size batch (static shapes; pad with repeats)
-    rng = np.random.default_rng(args.seed)
-    reqs = [Request(i, rng.integers(0, cfg.vocab_size,
-                                    args.prompt_len).astype(np.int32))
-            for i in range(args.requests)]
-    B = args.batch_size
+    max_len = args.max_len or (args.prompt_len + args.gen
+                               + (cfg.num_patches or 0))
+    engine = InferenceEngine(cfg, slots=args.batch_size, max_len=max_len)
+    if args.ckpt:
+        params = engine.restore_params(args.ckpt, params)
+    state = engine.init_state(params)
+    sched = Scheduler(engine, state,
+                      eos_id=args.eos if args.eos >= 0 else None)
+    reqs = make_requests(cfg, args)
     t0 = time.perf_counter()
-    done = []
-    while reqs:
-        batch_reqs = reqs[:B]
-        reqs = reqs[B:]
-        pad = B - len(batch_reqs)
-        toks = np.stack([r.prompt for r in batch_reqs]
-                        + [batch_reqs[-1].prompt] * pad)
-        inputs = {"tokens": jnp.asarray(toks)}
-        if cfg.family == "vlm":
-            inputs["patches"] = jnp.zeros(
-                (B, cfg.num_patches, cfg.frontend_dim), jnp.float32)
-        logits, cache = prefill(params, inputs)
-        pos = args.prompt_len + (cfg.num_patches or 0) - 1
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-        for r, t in zip(batch_reqs, np.asarray(tok)[:, 0]):
-            r.generated.append(int(t))
-        for step in range(args.gen - 1):
-            pos += 1
-            logits, cache = decode(params, cache, {"tokens": tok},
-                                   jnp.asarray(pos, jnp.int32))
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-            for r, t in zip(batch_reqs, np.asarray(tok)[:, 0]):
-                r.generated.append(int(t))
-        done.extend(batch_reqs)
+    generated = sched.run(reqs)
     wall = time.perf_counter() - t0
-    total_tokens = sum(len(r.generated) for r in done)
-    out = {"arch": cfg.name, "requests": len(done),
+    total_tokens = sum(len(g) for g in generated.values())
+    st = sched.stats
+    out = {"arch": cfg.name, "requests": len(generated),
            "tokens": total_tokens, "wall_s": round(wall, 3),
-           "tok_per_s": round(total_tokens / wall, 1)}
+           "tok_per_s": round(total_tokens / wall, 1),
+           "prefill_tok_per_s": round(
+               st["prefill_tokens"] / max(st["prefill_s"], 1e-9), 1),
+           "decode_tok_per_s": round(
+               st["decode_tokens"] / max(st["decode_s"], 1e-9), 1)}
     print(json.dumps(out))
-    for r in done[:2]:
+    for r in reqs[:2]:
         print(f"req {r.rid}: {r.generated[:12]}...")
     return out
+
+
+def serve_domst(args) -> dict:
+    cfg = get_config(args.arch)
+    windows = make_domst_windows(args.watersheds, args.days)
+    params = domst.init_stacked(cfg, jax.random.key(args.seed), len(windows))
+    if args.ckpt:
+        # params subtree of the full TrainState the train launcher saved
+        params = ckpt.restore_subtree(args.ckpt, params, prefix="params")
+    fc = Forecaster(cfg)
+    held = stacked_test_batch(windows)
+    params = fc.place_params(params)
+    jax.block_until_ready(fc(params, held)["qhat"])   # compile warmup, so
+    t0 = time.perf_counter()                          # the rate is honest
+    res = fc(params, held)
+    nses = [round(float(x), 6) for x in np.asarray(res["nse"])]
+    wall = time.perf_counter() - t0
+    horizon = int(held["discharge"].shape[1])
+    out = {"arch": cfg.name, "watersheds": len(windows),
+           "horizon_days": horizon, "restored": bool(args.ckpt),
+           "nse": nses, "mean_nse": round(float(np.mean(nses)), 6),
+           "wall_s": round(wall, 3),
+           "forecasts_per_s": round(len(windows) * horizon / wall, 1)}
+    print(json.dumps(out))
+    return out
+
+
+def serve(args) -> dict:
+    if args.arch.startswith("domst"):
+        return serve_domst(args)
+    return serve_lm(args)
 
 
 def main() -> None:
@@ -90,9 +131,23 @@ def main() -> None:
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--batch-size", type=int, default=4,
+                    help="decode slots (continuous-batching width)")
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="cache length (0 = prompt+gen+patches)")
+    ap.add_argument("--eos", type=int, default=-1,
+                    help="token id ending a request early (-1 = off)")
+    ap.add_argument("--ragged", action="store_true",
+                    help="vary prompt lengths across the request queue")
+    ap.add_argument("--ckpt", default="",
+                    help="TrainState .npz from repro.launch.train; only the "
+                         "params subtree is restored")
+    ap.add_argument("--watersheds", type=int, default=23,
+                    help="domst: watershed count (must match the ckpt run)")
+    ap.add_argument("--days", type=int, default=400,
+                    help="domst: synthetic record length (must match)")
     ap.add_argument("--seed", type=int, default=0)
     serve(ap.parse_args())
 

@@ -24,7 +24,10 @@ held-out loss for LMs) without pulling params to host.
 moments + step counter + rng stream); the restored step counter doubles as
 the loader's stream cursor, so a resumed run continues the batch stream
 exactly where it stopped — mid-epoch included, identically for the Dom-ST
-and LM paths.
+and LM paths.  The same ``--ckpt`` file is the hand-off into serving:
+``repro.launch.serve --ckpt`` restores just the params subtree into the
+sharded inference engine (Dom-ST forecast or LM continuous batching)
+without ever instantiating the optimizer moments.
 
 On this CPU container the default mesh is 1x1; the same script drives the
 production mesh on real hardware (``--mesh pod|multipod``).
@@ -48,10 +51,9 @@ from repro.configs import TrainConfig, get_config, smoke_variant
 from repro.core import domst
 from repro.data.loader import ShardedLoader
 from repro.data.pipeline import (
-    InputPipeline, StackedSource, WatershedSource, make_training_windows,
+    InputPipeline, StackedSource, WatershedSource, make_domst_windows,
     stacked_test_batch, train_split, train_test_split,
 )
-from repro.data.synthetic_hydro import generate_all_watersheds
 from repro.data.tokens import TokenSource, synthetic_token_batch
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.metrics import Meter
@@ -73,8 +75,7 @@ def train_domst(args) -> dict:
     cfg = get_config(args.arch)
     tc = TrainConfig(learning_rate=args.lr, total_steps=args.steps or 2000,
                      warmup_steps=50, grad_accum=args.accum_steps)
-    data = generate_all_watersheds(args.watersheds, num_days=args.days)
-    windows = [make_training_windows(w) for w in data.values()]
+    windows = make_domst_windows(args.watersheds, args.days)
     # train only on the leading split; the tail that eval_step scores
     # (stacked_test_batch / train_test_split) stays genuinely held out
     ip = InputPipeline([train_split(w) for w in windows],

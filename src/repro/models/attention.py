@@ -333,22 +333,24 @@ def fill_cache_from_prefill(cache: KVCache, k: jax.Array, v: jax.Array) -> KVCac
 
 def decode_attention(params, cfg: ModelConfig, x: jax.Array, cache: KVCache,
                      position: jax.Array, *, window: Optional[int] = None):
-    """One decode step.  x (B,1,d); position scalar int32 (current index).
+    """One decode step.  x (B,1,d); position int32 — a scalar (all rows at
+    the same index, the single-request path) or a (B,) vector of PER-ROW
+    indices (the serve engine's continuous-batching path, where every slot
+    advances its own counter).
 
     Returns (out (B,1,d), new_cache).
     """
     B = x.shape[0]
     dh = cfg.resolved_head_dim()
-    positions = jnp.full((B, 1), position, jnp.int32)
-    q, k_new, v_new = qkv_project(params, cfg, x, positions)
+    pos = jnp.broadcast_to(
+        jnp.atleast_1d(jnp.asarray(position, jnp.int32)), (B,))
+    q, k_new, v_new = qkv_project(params, cfg, x, pos[:, None])
     L = cache.k.shape[1]
-    slot = position % L
-    new_k = jax.lax.dynamic_update_slice_in_dim(
-        cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
-    new_v = jax.lax.dynamic_update_slice_in_dim(
-        cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
-    new_pos = jax.lax.dynamic_update_slice_in_dim(
-        cache.pos, jnp.full((B, 1), position, jnp.int32), slot, axis=1)
+    slot = pos % L                                              # (B,) ring slots
+    bidx = jnp.arange(B)
+    new_k = cache.k.at[bidx, slot].set(k_new[:, 0].astype(cache.k.dtype))
+    new_v = cache.v.at[bidx, slot].set(v_new[:, 0].astype(cache.v.dtype))
+    new_pos = cache.pos.at[bidx, slot].set(pos)
     new_cache = KVCache(new_k, new_v, new_pos)
 
     Hq, Hkv = cfg.num_heads, cfg.num_kv_heads
@@ -360,9 +362,10 @@ def decode_attention(params, cfg: ModelConfig, x: jax.Array, cache: KVCache,
     if cfg.attn_softcap:
         s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
     kp = new_cache.pos[:, None, None, None, :]                  # (B,1,1,1,L)
-    mask = (kp >= 0) & (kp <= position)
+    pq = pos[:, None, None, None, None]                         # (B,1,1,1,1)
+    mask = (kp >= 0) & (kp <= pq)
     if window is not None:
-        mask = mask & (position - kp < window)
+        mask = mask & (pq - kp < window)
     s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(q.dtype),

@@ -412,7 +412,13 @@ def prefill(params, cfg: ModelConfig, inputs: Dict[str, jax.Array],
 
 def decode_step(params, cfg: ModelConfig, inputs: Dict[str, jax.Array],
                 caches, position: jax.Array, *, dtype=jnp.bfloat16):
-    """One decode step: token (B,1) + caches -> (logits (B,V), new caches)."""
+    """One decode step: token (B,1) + caches -> (logits (B,V), new caches).
+
+    ``position`` is either a scalar (every row at the same index — the
+    single-request path) or a (B,) int32 vector of per-row indices: the
+    serve engine's continuous-batching path, where each cache row is a
+    request slot advancing its own position counter (requests with ragged
+    prompt lengths therefore coexist in one decode batch)."""
     x = embed_inputs(params, cfg, inputs, dtype)
     if cfg.contribution_gate:
         x = contribution_gate(params["gate"], x)

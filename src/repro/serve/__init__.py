@@ -1,0 +1,6 @@
+from repro.serve.engine import InferenceEngine  # noqa: F401
+from repro.serve.forecast import Forecaster  # noqa: F401
+from repro.serve.scheduler import Request, Scheduler  # noqa: F401
+from repro.serve.state import (  # noqa: F401
+    InferenceState, inference_state_axes, new_inference_state,
+)

@@ -1,0 +1,203 @@
+"""The mesh-sharded inference engine — serving twin of ``train.Engine``.
+
+One :class:`InferenceEngine` owns what the standalone decode loop in the
+old ``launch/serve.py`` hand-rolled (unsharded, random params, no slot
+reuse):
+
+  * the logical-axis rule tables from ``distributed/sharding.py`` resolved
+    into ``in_shardings``/``out_shardings`` for the whole
+    :class:`InferenceState` — params under the same placement training
+    used, cache leaves through ``cache_axes`` where the ``cache_seq`` rule
+    takes the ``cache_needs_seq_shard`` branch;
+  * a jitted, donated prefill-insert step: prefill ONE request at its
+    exact prompt length (no padding, so recurrent/SSM state is exact) and
+    scatter its cache into a free slot of the slot-major state;
+  * a jitted, donated decode step over ALL slots at once, each advancing
+    its own position counter (ragged prompt lengths coexist in one batch);
+  * the trained-checkpoint hand-off: ``from_train_state`` adopts a live
+    ``TrainState.params`` without gathering to host, and
+    ``restore_params`` rebuilds only the params subtree of a TrainState
+    .npz (optimizer moments are never instantiated).
+
+Slot allocation / EOS eviction policy lives in ``serve.scheduler``; the
+engine is policy-free and model-agnostic across every
+``cfg.supports_decode()`` architecture.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro import checkpoint as ckpt
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import (
+    logical_sharding, make_rules, resolve_pspec, tree_shardings,
+)
+from repro.models import transformer as tfm
+from repro.serve.state import (
+    InferenceState, inference_state_axes, new_inference_state, scatter_slot,
+)
+
+
+class InferenceEngine:
+    """Sharded, donated prefill/decode step factory over request slots."""
+
+    def __init__(self, cfg: ModelConfig, *, mesh=None, slots: int = 4,
+                 max_len: int = 64, dtype=jnp.bfloat16,
+                 rules: Optional[dict] = None, donate: bool = True,
+                 explicit_shardings: bool = True):
+        if not cfg.supports_decode():
+            raise ValueError(f"{cfg.name} has no decode path")
+        self.cfg = cfg
+        self.slots = int(slots)
+        self.max_len = int(max_len)
+        self.dtype = dtype
+        self.donate = donate
+        # mesh and rules are built LAZILY, mirroring train.Engine: never
+        # touch jax device state before the launcher injects XLA_FLAGS
+        self._mesh = mesh
+        self._rules = rules
+        self._explicit = explicit_shardings
+        self._axes = inference_state_axes(cfg)
+        self._cache_axes = tfm.cache_axes(cfg)
+        self._jit_cache: dict = {}
+
+    @property
+    def mesh(self):
+        if self._mesh is None:
+            from repro.launch.mesh import make_host_mesh
+            self._mesh = make_host_mesh()
+        return self._mesh
+
+    @property
+    def rules(self) -> dict:
+        if self._rules is None:
+            self._rules = make_rules(self.cfg, mesh=self.mesh)
+        return self._rules
+
+    # -- state lifecycle ---------------------------------------------------
+    def init_state(self, params: Any) -> InferenceState:
+        """Fresh InferenceState around ``params``, placed on its shardings.
+
+        Takes OWNERSHIP of ``params`` (the buffers are donated through the
+        jitted steps): when handing off a live TrainState the training side
+        must be done with it, and when the shardings already match — the
+        ``from_train_state`` path — the device_put is a no-op and the
+        weights never return to host."""
+        state = new_inference_state(params, self.cfg, slots=self.slots,
+                                    max_len=self.max_len, dtype=self.dtype)
+        if self._explicit:
+            state = jax.device_put(state, self.state_shardings(state))
+        return state
+
+    @classmethod
+    def from_train_state(cls, train_engine, train_state, *, slots: int = 4,
+                         max_len: int = 64, dtype=jnp.bfloat16,
+                         **kw) -> tuple["InferenceEngine", InferenceState]:
+        """Adopt a trained ``TrainState`` from a ``train.Engine`` in place.
+
+        The inference engine reuses the train engine's mesh; its rule table
+        resolves the params to the same NamedShardings training used (the
+        fsdp variant re-gathers shard-to-shard on device), so the returned
+        InferenceState is built without a host round-trip.  The train state
+        must not be stepped afterwards — its params are donated here."""
+        eng = cls(train_engine.cfg, mesh=train_engine.mesh, slots=slots,
+                  max_len=max_len, dtype=dtype, **kw)
+        return eng, eng.init_state(train_state.params)
+
+    def restore_params(self, path: str, example_params: Any) -> Any:
+        """Params subtree of a full-TrainState .npz, restored into
+        ``example_params`` — the CLI hand-off (``--ckpt`` from
+        ``repro.launch.train``) without touching optimizer moments."""
+        return ckpt.restore_subtree(path, example_params, prefix="params")
+
+    # -- sharding resolution -----------------------------------------------
+    def state_shardings(self, state: InferenceState) -> InferenceState:
+        """NamedSharding tree matching ``state`` from the rule tables."""
+        return tree_shardings(self._axes, state, self.mesh, self.rules)
+
+    def _input_shardings(self, inputs: Dict[str, jax.Array]):
+        out = {}
+        for k, v in inputs.items():
+            axes = ("batch",) + (None,) * (jnp.ndim(v) - 1)
+            out[k] = NamedSharding(self.mesh, resolve_pspec(
+                axes, jnp.shape(v), self.mesh, self.rules))
+        return out
+
+    # -- the two steps -----------------------------------------------------
+    def _insert_fn(self, state: InferenceState, inputs: Dict[str, jax.Array],
+                   slot: jax.Array):
+        logits, cache_one = tfm.prefill(state.params, self.cfg, inputs,
+                                        max_len=self.max_len,
+                                        dtype=self.dtype)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)          # (1,)
+        total = inputs["tokens"].shape[1] + (
+            inputs["patches"].shape[1] if "patches" in inputs else 0)
+        return InferenceState(
+            params=state.params,
+            cache=scatter_slot(self._cache_axes, state.cache, cache_one,
+                               slot),
+            positions=state.positions.at[slot].set(total),
+            last_tok=state.last_tok.at[slot].set(tok[0]),
+        ), tok
+
+    def _decode_fn(self, state: InferenceState):
+        logits, cache = tfm.decode_step(
+            state.params, self.cfg, {"tokens": state.last_tok[:, None]},
+            state.cache, state.positions, dtype=self.dtype)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)          # (slots,)
+        return InferenceState(state.params, cache, state.positions + 1,
+                              tok), tok
+
+    def _get_jit(self, kind: str, state, inputs=None):
+        key = (kind,) + (tuple(sorted(
+            (k, tuple(jnp.shape(v)), str(v.dtype))
+            for k, v in inputs.items())) if inputs else ())
+        jfn = self._jit_cache.get(key)
+        if jfn is None:
+            donate = (0,) if self.donate else ()
+            if not self._explicit:
+                fn = self._insert_fn if kind == "insert" else self._decode_fn
+                jfn = jax.jit(fn, donate_argnums=donate)
+            else:
+                st_sh = self.state_shardings(state)
+                if kind == "insert":
+                    jfn = jax.jit(
+                        self._insert_fn,
+                        in_shardings=(st_sh, self._input_shardings(inputs),
+                                      None),
+                        out_shardings=(st_sh, None),
+                        donate_argnums=donate)
+                else:
+                    jfn = jax.jit(self._decode_fn,
+                                  in_shardings=(st_sh,),
+                                  out_shardings=(st_sh, None),
+                                  donate_argnums=donate)
+            self._jit_cache[key] = jfn
+        return jfn
+
+    def insert(self, state: InferenceState, inputs: Dict[str, jax.Array],
+               slot: int):
+        """Prefill ONE request (tokens (1, L), exact length — plus patches
+        for VLM archs) into slot ``slot``.  Returns (state, first greedy
+        token (1,)).  Jit-cached per distinct prompt shape."""
+        inputs = {k: jnp.asarray(v) for k, v in inputs.items()}
+        jfn = self._get_jit("insert", state, inputs)
+        slot = jnp.asarray(slot, jnp.int32)
+        if not self._explicit:
+            return jfn(state, inputs, slot)
+        with self.mesh, logical_sharding(self.mesh, self.rules):
+            return jfn(state, inputs, slot)
+
+    def decode(self, state: InferenceState):
+        """One decode step over ALL slots: each slot's last token advances
+        its own position counter.  Returns (state, greedy tokens (slots,));
+        free slots produce garbage tokens the scheduler ignores."""
+        jfn = self._get_jit("decode", state)
+        if not self._explicit:
+            return jfn(state)
+        with self.mesh, logical_sharding(self.mesh, self.rules):
+            return jfn(state)

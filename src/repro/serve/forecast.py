@@ -1,0 +1,118 @@
+"""Dom-ST serving: autoregressive peak-discharge forecasting (the paper's
+headline workload) from a trained stacked watershed state.
+
+A :class:`Forecaster` takes the stacked multi-watershed params a
+``train.Engine`` checkpointed (leading axis = watershed, sharded over the
+data/pod mesh axes exactly as in training) and rolls the network forward
+DAY BY DAY over future forcing windows: a ``lax.scan`` over the forecast
+horizon inside a per-watershed ``vmap``, each step consuming one trailing
+precipitation window + domain prior and emitting that day's discharge.
+Per-watershed NSE/MSE against held-out observed discharge come back from
+the same jitted call — the serving twin of ``Engine.eval_step``, and
+numerically interchangeable with it (each day's window is independent, so
+the scanned rollout matches the batched eval; the CLI round-trip test
+pins this).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs.base import ModelConfig
+from repro.core import domst
+from repro.distributed.sharding import (
+    logical_sharding, make_rules, resolve_pspec, tree_shardings,
+)
+from repro.metrics.nse import nse
+
+FORCING_KEYS = ("precip", "target_day", "dist")
+
+
+class Forecaster:
+    """Jitted, sharded multi-watershed discharge forecaster."""
+
+    def __init__(self, cfg: ModelConfig, *, mesh=None,
+                 rules: Optional[dict] = None,
+                 explicit_shardings: bool = True):
+        self.cfg = cfg
+        self._mesh = mesh
+        self._rules = rules
+        self._explicit = explicit_shardings
+        # stacked param axes: leading watershed axis -> "batch" (pod/data)
+        self._param_axes = domst.stacked_param_specs(cfg)
+        self._jit_cache: dict = {}
+
+    @property
+    def mesh(self):
+        if self._mesh is None:
+            from repro.launch.mesh import make_host_mesh
+            self._mesh = make_host_mesh()
+        return self._mesh
+
+    @property
+    def rules(self) -> dict:
+        if self._rules is None:
+            self._rules = make_rules(self.cfg, mesh=self.mesh)
+        return self._rules
+
+    def param_shardings(self, params: Any) -> Any:
+        return tree_shardings(self._param_axes, params, self.mesh,
+                              self.rules)
+
+    def place_params(self, params: Any) -> Any:
+        """device_put ``params`` under the stacked rule-table shardings —
+        a no-op for a live hand-off from the stacked train engine."""
+        return jax.device_put(params, self.param_shardings(params))
+
+    def _batch_shardings(self, batch: Dict[str, jax.Array]):
+        out = {}
+        for k, v in batch.items():
+            inner = domst.BATCH_AXES.get(k, (None,) * (jnp.ndim(v) - 1))
+            axes = ("batch",) + tuple(None if a == "batch" else a
+                                      for a in inner)
+            out[k] = NamedSharding(self.mesh, resolve_pspec(
+                axes, jnp.shape(v), self.mesh, self.rules))
+        return out
+
+    def _forecast_fn(self, params: Any, batch: Dict[str, jax.Array]):
+        def one_watershed(p, b):
+            forcing = {k: b[k] for k in FORCING_KEYS}
+
+            def day(_, f):
+                q = domst.forward(p, self.cfg,
+                                  jax.tree.map(lambda x: x[None], f))
+                return None, q[0]
+
+            _, qhat = jax.lax.scan(day, None, forcing)          # (N,)
+            return qhat
+
+        qhat = jax.vmap(one_watershed)(params, batch)           # (W, N)
+        obs = batch["discharge"]
+        return {"qhat": qhat,
+                "nse": jax.vmap(nse)(qhat, obs),
+                "mse": jnp.mean(jnp.square(qhat - obs), axis=-1)}
+
+    def __call__(self, params: Any, batch: Dict[str, Any]
+                 ) -> Dict[str, jax.Array]:
+        """params: stacked (W, ...) tree; batch: (W, N, ...) forcing windows
+        plus observed ``discharge`` (W, N).  Returns per-watershed qhat
+        (W, N), nse (W,) and mse (W,)."""
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        key = tuple(sorted((k, tuple(jnp.shape(v)), str(v.dtype))
+                           for k, v in batch.items()))
+        jfn = self._jit_cache.get(key)
+        if jfn is None:
+            if self._explicit:
+                jfn = jax.jit(self._forecast_fn,
+                              in_shardings=(self.param_shardings(params),
+                                            self._batch_shardings(batch)))
+            else:
+                jfn = jax.jit(self._forecast_fn)
+            self._jit_cache[key] = jfn
+        if not self._explicit:
+            return jfn(params, batch)
+        with self.mesh, logical_sharding(self.mesh, self.rules):
+            return jfn(params, batch)

@@ -1,0 +1,115 @@
+"""Continuous batching over the inference engine's request slots.
+
+The scheduler owns the batching POLICY the engine deliberately excludes:
+admit a pending request into any free slot (one jitted prefill-insert at
+its exact prompt length), run the fused all-slot decode step, harvest
+each active slot's token, and evict a slot the moment its request
+finishes — EOS token or per-request ``max_new`` budget — so the next
+pending request reuses it without reshaping the state.
+
+Each slot's computation is independent of its neighbours (attention,
+recurrent state and MoE routing are all per-row), so a request's greedy
+output is a function of its prompt alone: deterministic under any
+arrival order, slot assignment, or co-batched traffic — the property
+``tests/test_serve.py`` pins.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.engine import InferenceEngine
+from repro.serve.state import InferenceState
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                      # (L,) int32 token ids
+    max_new: int = 16
+    extras: Dict[str, np.ndarray] = field(default_factory=dict)  # e.g. patches
+    generated: List[int] = field(default_factory=list)
+    slot: Optional[int] = None              # last slot served in (telemetry)
+
+
+class Scheduler:
+    """Drives an :class:`InferenceEngine` over a queue of requests."""
+
+    def __init__(self, engine: InferenceEngine, state: InferenceState, *,
+                 eos_id: Optional[int] = None):
+        self.engine = engine
+        self.state = state
+        self.eos_id = eos_id
+        #: per-slot rid history — lets tests assert slots are actually reused
+        self.slot_history: Dict[int, List[int]] = {
+            s: [] for s in range(engine.slots)}
+        self.stats = {"prefill_tokens": 0, "prefill_s": 0.0,
+                      "decode_tokens": 0, "decode_s": 0.0, "decode_steps": 0}
+
+    def _done(self, r: Request) -> bool:
+        if not r.generated:
+            return False
+        if self.eos_id is not None and r.generated[-1] == self.eos_id:
+            return True
+        return len(r.generated) >= r.max_new
+
+    def _admit(self, r: Request, slot: int) -> None:
+        if r.max_new < 1:
+            # the prefill itself emits the first greedy token, so a budget
+            # below one token is unservable rather than silently exceeded
+            raise ValueError(f"request {r.rid}: max_new must be >= 1")
+        prompt = np.asarray(r.prompt, np.int32)
+        # VLM patch embeddings occupy cache positions ahead of the prompt
+        patches = int(np.shape(r.extras["patches"])[0]) \
+            if "patches" in r.extras else 0
+        if patches + len(prompt) + r.max_new > self.engine.max_len:
+            raise ValueError(
+                f"request {r.rid}: patches {patches} + prompt {len(prompt)} "
+                f"+ max_new {r.max_new} exceeds engine max_len "
+                f"{self.engine.max_len} (the cache ring would wrap and "
+                f"overwrite live context)")
+        inputs = {"tokens": prompt[None, :]}
+        for k, v in r.extras.items():
+            inputs[k] = np.asarray(v)[None]
+        t0 = time.perf_counter()
+        self.state, tok = self.engine.insert(self.state, inputs, slot)
+        first = int(np.asarray(tok)[0])     # sync point ends the timing
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        self.stats["prefill_tokens"] += sum(
+            int(np.shape(v)[1]) for v in inputs.values())
+        r.generated.append(first)
+        r.slot = slot
+        self.slot_history[slot].append(r.rid)
+
+    def run(self, requests: Sequence[Request]) -> Dict[int, List[int]]:
+        """Serve ``requests`` to completion; returns {rid: generated}."""
+        pending = deque(requests)
+        active: Dict[int, Request] = {}
+        free = deque(range(self.engine.slots))
+        while pending or active:
+            while pending and free:
+                slot = free.popleft()
+                r = pending.popleft()
+                self._admit(r, slot)
+                if self._done(r):           # EOS straight out of prefill
+                    free.append(slot)
+                else:
+                    active[slot] = r
+            if not active:
+                continue
+            t0 = time.perf_counter()
+            self.state, toks = self.engine.decode(self.state)
+            toks = np.asarray(toks)         # sync point ends the timing
+            self.stats["decode_s"] += time.perf_counter() - t0
+            self.stats["decode_steps"] += 1
+            self.stats["decode_tokens"] += len(active)
+            for slot, r in list(active.items()):
+                r.generated.append(int(toks[slot]))
+                if self._done(r):
+                    del active[slot]
+                    free.append(slot)
+        return {r.rid: list(r.generated) for r in requests}

@@ -1,0 +1,73 @@
+"""InferenceState: the single pytree the inference engine owns.
+
+Mirror of ``repro.train.state``: everything a serving replica needs —
+model parameters, the slot-major decode cache (KV rings for attention
+layers, recurrent/conv state for RG-LRU and SSD layers) and the per-slot
+position counters — travels through the jitted prefill-insert and decode
+steps as one donated pytree, sharded by one structurally-matched
+logical-spec tree resolved from the ``distributed/sharding.py`` rule
+tables (the ``cache_seq`` axis takes the ``cache_needs_seq_shard``
+branch so a long cache never replicates across the model axis).
+
+The leading axis of every cache leaf is the REQUEST SLOT axis (logical
+``batch`` -> the data/pod mesh axes): continuous batching allocates a
+slot per admitted request and evicts it on EOS, so slots are recycled
+in place with a scatter — the state never changes shape.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import is_axes
+from repro.models import transformer as tfm
+
+
+class InferenceState(NamedTuple):
+    params: Any
+    cache: Any            # tfm.init_cache pytree, slot-major leading axis
+    positions: jax.Array  # (S,) int32: next write index per slot
+    last_tok: jax.Array   # (S,) int32: last accepted/emitted token per slot
+
+
+def inference_state_axes(cfg: ModelConfig) -> InferenceState:
+    """Logical-axes tree structurally matching an InferenceState.
+
+    Params reuse the ParamFactory spec tree (same placement as training,
+    minus the fsdp variant — serving has no optimizer state to amortize);
+    cache leaves come from ``tfm.cache_axes`` whose ``cache_seq`` axis the
+    rule table routes through ``cache_needs_seq_shard``."""
+    return InferenceState(
+        params=tfm.param_specs(cfg),
+        cache=tfm.cache_axes(cfg),
+        positions=("batch",),
+        last_tok=("batch",),
+    )
+
+
+def new_inference_state(params: Any, cfg: ModelConfig, *, slots: int,
+                        max_len: int, dtype=jnp.bfloat16) -> InferenceState:
+    """Fresh state around ``params`` with ``slots`` empty request slots."""
+    return InferenceState(
+        params=params,
+        cache=tfm.init_cache(cfg, slots, max_len, dtype=dtype),
+        positions=jnp.zeros((slots,), jnp.int32),
+        last_tok=jnp.zeros((slots,), jnp.int32),
+    )
+
+
+def scatter_slot(axes_tree: Any, full: Any, one: Any, slot) -> Any:
+    """Write a single-request cache ``one`` (slot axis of size 1) into row
+    ``slot`` of the slot-major cache ``full``.
+
+    The slot axis is found per leaf from the logical-axes tree (scanned
+    block leaves carry a leading layer-repetition axis before ``batch``),
+    so one tree_map covers KV rings and recurrent state alike."""
+    def _one(ax, f, o):
+        i = ax.index("batch")
+        idx = (slice(None),) * i + (slot,)
+        return f.at[idx].set(jnp.take(o, 0, axis=i).astype(f.dtype))
+    return jax.tree.map(_one, axes_tree, full, one, is_leaf=is_axes)

@@ -241,6 +241,16 @@ class Engine:
             step=self._one(ax.step, state.step, self.rules),
             rng=self._one(ax.rng, state.rng, self.rules))
 
+    def param_shardings(self, params: Any) -> Any:
+        """NamedSharding tree for the params subtree alone — the serve
+        hand-off contract.  For a non-fsdp engine these are exactly the
+        shardings ``repro.serve.InferenceEngine`` resolves for its
+        InferenceState params, so ``from_train_state`` adopts the live
+        buffers without a host round-trip (pinned by tests/test_serve.py);
+        an fsdp engine's params re-gather shard-to-shard on device."""
+        return tree_shardings(self._axes.params, params, self.mesh,
+                              self.param_rules)
+
     def batch_shardings(self, batch: Dict[str, jax.Array]) -> Dict[str, Any]:
         key = tuple(sorted((k, tuple(jnp.shape(v))) for k, v in batch.items()))
         cached = self._bs_cache.get(key)

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import TrainConfig
+from repro.distributed.sharding import is_axes  # noqa: F401  (re-export)
 from repro.optim import OptState, make_optimizer
 
 Axes = Tuple
@@ -27,12 +28,6 @@ class TrainState(NamedTuple):
     opt_state: OptState
     step: jax.Array          # engine-level step counter, scalar int32
     rng: jax.Array           # PRNG key data (uint32); (n, 2) when stacked
-
-
-def is_axes(x: Any) -> bool:
-    """True for a logical-axes tuple leaf (the ParamFactory spec leaves)."""
-    return isinstance(x, tuple) and all(
-        isinstance(e, (str, type(None))) for e in x)
 
 
 def new_train_state(params: Any, tc: TrainConfig, key: jax.Array, *,

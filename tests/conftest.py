@@ -9,6 +9,23 @@ import jax
 import numpy as np
 import pytest
 
+# hypothesis is a dev-only dependency (requirements-dev.txt): register the
+# property-test profiles here, once, so every module shares them.  "ci"
+# derandomizes (examples derived from the test function itself, no RNG, no
+# example database) so tier-1 is bit-for-bit reproducible on CI; locally the
+# default "dev" profile keeps randomized exploration.  Select explicitly
+# with HYPOTHESIS_PROFILE=ci|dev.
+try:
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile("dev", max_examples=25, deadline=None)
+    _hyp_settings.register_profile("ci", max_examples=25, deadline=None,
+                                   derandomize=True, print_blob=True)
+    _hyp_settings.load_profile(os.environ.get(
+        "HYPOTHESIS_PROFILE", "ci" if os.environ.get("CI") else "dev"))
+except ImportError:                      # pragma: no cover - optional dep
+    pass
+
 
 @pytest.fixture(scope="session")
 def rng():

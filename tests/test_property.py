@@ -1,7 +1,9 @@
 """Hypothesis property tests on system invariants.
 
 ``hypothesis`` is a dev-only dependency (requirements-dev.txt); skip the
-whole module instead of aborting collection when it's absent.
+whole module instead of aborting collection when it's absent.  The
+settings profiles live in ``tests/conftest.py`` ("ci" derandomizes so the
+tier-1 run is reproducible); this module must NOT load its own profile.
 """
 import jax
 import jax.numpy as jnp
@@ -17,10 +19,6 @@ from repro.core.partitioner import partition_pixels
 from repro.kernels.conv1d.ref import causal_conv1d_ref
 from repro.metrics import nse
 from repro.models.layers import cross_entropy, softcap
-
-hypothesis.settings.register_profile(
-    "fast", settings(max_examples=25, deadline=None))
-hypothesis.settings.load_profile("fast")
 
 floats = st.floats(-10, 10, allow_nan=False, width=32)
 

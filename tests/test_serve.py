@@ -1,0 +1,259 @@
+"""Engine-driven sharded inference (repro/serve/): prefill+decode parity
+across every decodable arch, rule-table shardings of the InferenceState on
+a forced multi-device mesh, continuous-batching invariants (slot reuse,
+ragged prompts, arrival-order determinism), and the train -> ckpt -> serve
+hand-off."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (
+    ASSIGNED_ARCHS, TrainConfig, get_config, smoke_variant,
+)
+from repro.core import domst
+from repro.data.pipeline import make_domst_windows, stacked_test_batch
+from repro.distributed.sharding import (
+    cache_needs_seq_shard, make_rules, tree_shardings,
+)
+from repro.models import transformer as T
+from repro.models.layers import unembed
+from repro.serve import InferenceEngine, Request, Scheduler
+from repro.train import Engine
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+DECODE_ARCHS = [a for a in ASSIGNED_ARCHS if get_config(a).supports_decode()]
+
+PROMPT, GEN = 8, 4
+
+
+def _ample_moe(cfg):
+    """Capacity large enough that routing never drops tokens (else the
+    full-sequence pass and the one-token decode pass drop differently)."""
+    import dataclasses
+    if cfg.moe is not None:
+        return cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                   capacity_factor=8.0))
+    return cfg
+
+
+def _requests(cfg, lens, gen=GEN, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i, n in enumerate(lens):
+        extras = {}
+        if cfg.family == "vlm":
+            extras["patches"] = rng.normal(
+                0, 1, (cfg.num_patches, cfg.frontend_dim)).astype(np.float32)
+        reqs.append(Request(
+            rid=i, max_new=gen, extras=extras,
+            prompt=rng.integers(0, cfg.vocab_size, n).astype(np.int32)))
+    return reqs
+
+
+def _serve(cfg, reqs, *, slots, eos=None, mesh=None, max_len=None):
+    eng = InferenceEngine(cfg, slots=slots, mesh=mesh, dtype=jnp.float32,
+                          max_len=max_len or (PROMPT + GEN
+                                              + (cfg.num_patches or 0)))
+    state = eng.init_state(T.init(cfg, jax.random.key(0)))
+    sched = Scheduler(eng, state, eos_id=eos)
+    return sched.run(reqs), sched
+
+
+# ---------------------------------------------------------------------------
+# Prefill + decode parity: greedy tokens off the incremental cache path must
+# bit-match a teacher-forced full-sequence forward argmax, for every arch
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_prefill_decode_parity(arch):
+    cfg = _ample_moe(smoke_variant(get_config(arch)))
+    reqs = _requests(cfg, [PROMPT, PROMPT])
+    out, _ = _serve(cfg, reqs, slots=2)
+    # reference: full-sequence forward over prompt + generated (the params
+    # in the engine state were donated — re-init the identical tree)
+    params = T.init(cfg, jax.random.key(0))
+    for r in reqs:
+        full = np.concatenate([r.prompt, np.asarray(out[r.rid], np.int32)])
+        inputs = {"tokens": jnp.asarray(full[None, :-1])}
+        for k, v in r.extras.items():
+            inputs[k] = jnp.asarray(v[None])
+        x, _ = T.forward(params, cfg, inputs, dtype=jnp.float32)
+        logits = unembed(params["embed"], x, tie=cfg.tie_embeddings,
+                         cap=cfg.logit_softcap, real_vocab=cfg.vocab_size)
+        start = (cfg.num_patches or 0) + len(r.prompt) - 1
+        want = np.asarray(jnp.argmax(logits[0, start:start + GEN], -1))
+        assert want.tolist() == out[r.rid], arch
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching invariants
+# ---------------------------------------------------------------------------
+def test_ragged_prompts_match_solo_runs():
+    """Requests with ragged prompt lengths served in ONE batch produce the
+    same tokens as each request served alone."""
+    cfg = smoke_variant(get_config("olmo-1b"))
+    lens = [5, 8, 6, 7]
+    batched, _ = _serve(cfg, _requests(cfg, lens), slots=4)
+    for i, n in enumerate(lens):
+        solo, _ = _serve(cfg, [_requests(cfg, lens)[i]], slots=1)
+        assert solo[i] == batched[i], (i, n)
+
+
+def test_arrival_order_determinism():
+    """Per-request output is a function of the prompt alone: any queue
+    order / slot assignment / co-batching yields identical tokens."""
+    cfg = smoke_variant(get_config("olmo-1b"))
+    lens = [8, 5, 7, 6]
+    a, _ = _serve(cfg, _requests(cfg, lens), slots=2)
+    shuffled = _requests(cfg, lens)
+    shuffled = [shuffled[i] for i in (3, 1, 0, 2)]
+    b, _ = _serve(cfg, shuffled, slots=2)
+    assert a == b
+
+
+def test_eos_eviction_reuses_slot():
+    """A request hitting EOS is evicted immediately, its slot is reused by
+    a pending request, and every stream equals its solo run truncated at
+    the first EOS."""
+    cfg = smoke_variant(get_config("olmo-1b"))
+    lens = [8, 7, 6]
+    # probe: pick request 0's 2nd greedy token as the EOS id
+    probe, _ = _serve(cfg, _requests(cfg, lens), slots=2)
+    eos = probe[0][1]
+
+    def truncate(toks):
+        return toks[:toks.index(eos) + 1] if eos in toks else toks
+
+    out, sched = _serve(cfg, _requests(cfg, lens), slots=2, eos=eos)
+    for rid in (0, 1, 2):
+        assert out[rid] == truncate(probe[rid]), rid
+    assert out[0][-1] == eos and len(out[0]) < GEN
+    # request 2 was pending behind 2 slots; the early eviction freed one
+    reused = [h for h in sched.slot_history.values() if len(h) > 1]
+    assert reused and any(2 in h for h in reused), sched.slot_history
+
+
+# ---------------------------------------------------------------------------
+# Rule-table shardings of the InferenceState on a real multi-device mesh
+# ---------------------------------------------------------------------------
+needs8 = pytest.mark.skipif(len(jax.devices()) < 8,
+                            reason="needs 8 host devices (CI sets XLA_FLAGS)")
+
+
+def _leaf_shardings(tree):
+    return jax.tree.leaves(jax.tree.map(lambda x: x.sharding, tree))
+
+
+@needs8
+def test_inference_state_shardings_match_rule_tables():
+    """On a (4, 2) mesh the InferenceState params and cache land exactly
+    where the rule tables say — including BOTH branches of
+    ``cache_needs_seq_shard``: olmo's divisible kv_heads shard over
+    "model" (cache_seq replicated), while a ffn-mode variant flips the
+    cache's sequence axis onto "model" instead."""
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    for arch, ffn_mode in (("olmo-1b", False), ("olmo-1b", True)):
+        cfg = smoke_variant(get_config(arch))
+        if ffn_mode:
+            cfg = cfg.replace(tp_mode="ffn")
+        assert cache_needs_seq_shard(cfg, mesh) == ffn_mode
+        eng = InferenceEngine(cfg, mesh=mesh, slots=4, max_len=16,
+                              dtype=jnp.float32)
+        state = eng.init_state(T.init(cfg, jax.random.key(0)))
+        rules = make_rules(cfg, mesh=mesh)
+        assert rules["cache_seq"] == ("model" if ffn_mode else None)
+        want = tree_shardings(T.param_specs(cfg), state.params, mesh, rules)
+        assert _leaf_shardings(state.params) == jax.tree.leaves(
+            want, is_leaf=lambda x: hasattr(x, "spec"))
+        # the KV ring of the scanned blocks: slots axis over "data", and the
+        # model axis on kv_heads (heads mode) vs cache_seq (ffn mode)
+        kv = state.cache["blocks"][str(cfg.layer_pattern.index("global"))] \
+            if "blocks" in state.cache else state.cache["prefix"][0]
+        spec = kv.k.sharding.spec
+        assert spec[1] == "data", spec
+        if ffn_mode:
+            assert spec[2] == "model", spec
+        else:
+            assert spec[3] == "model", spec
+        assert state.positions.sharding.spec[0] == "data"
+
+
+@needs8
+def test_mesh_serving_matches_single_device_tokens():
+    """Greedy streams served off the (4, 2)-sharded state bit-match the
+    default 1x1-mesh engine."""
+    cfg = smoke_variant(get_config("qwen2-1.5b"))
+    lens = [8, 6, 7, 8]
+    ref, _ = _serve(cfg, _requests(cfg, lens), slots=4)
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    got, _ = _serve(cfg, _requests(cfg, lens), slots=4, mesh=mesh)
+    assert got == ref
+
+
+# ---------------------------------------------------------------------------
+# train -> ckpt -> serve hand-off
+# ---------------------------------------------------------------------------
+def test_from_train_state_hand_off_no_host_gather():
+    """A live TrainState converts to an InferenceState in place: same
+    buffers (donated, never gathered to host) and the served tokens match
+    an engine built from an identical fresh init."""
+    cfg = smoke_variant(get_config("olmo-1b"))
+    tc = TrainConfig(learning_rate=1e-3, total_steps=4, warmup_steps=1)
+    eng = Engine.for_lm(cfg, tc)
+    tstate = eng.init_state(jax.random.key(0), T.init(cfg, jax.random.key(7)))
+    # the hand-off contract: the train engine's param shardings ARE the
+    # inference-side placement (non-fsdp), so the adopt is a no-op
+    want = jax.tree.leaves(eng.param_shardings(tstate.params))
+    ieng, istate = InferenceEngine.from_train_state(
+        eng, tstate, slots=2, max_len=PROMPT + GEN, dtype=jnp.float32)
+    assert ieng.mesh is eng.mesh
+    assert _leaf_shardings(istate.params) == want
+    sched = Scheduler(ieng, istate)
+    got = sched.run(_requests(cfg, [PROMPT, PROMPT]))
+
+    eng2 = InferenceEngine(cfg, slots=2, max_len=PROMPT + GEN,
+                           dtype=jnp.float32)
+    st2 = eng2.init_state(T.init(cfg, jax.random.key(7)))
+    want = Scheduler(eng2, st2).run(_requests(cfg, [PROMPT, PROMPT]))
+    assert got == want
+
+
+def test_train_ckpt_serve_cli_roundtrip(tmp_path):
+    """CLI regression: a TrainState checkpointed by repro.launch.train,
+    restored by repro.launch.serve (params subtree only), forecasts the
+    SAME per-watershed NSE that Engine.eval_step reports on the restored
+    state."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    ck = str(tmp_path / "state.npz")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "domst",
+         "--watersheds", "2", "--days", "120", "--epochs", "1",
+         "--ckpt", ck],
+        capture_output=True, text=True, env=env, timeout=300)
+    assert out.returncode == 0, out.stderr[-800:]
+    assert os.path.exists(ck)
+    out2 = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "domst",
+         "--ckpt", ck, "--watersheds", "2", "--days", "120"],
+        capture_output=True, text=True, env=env, timeout=300)
+    assert out2.returncode == 0, out2.stderr[-800:]
+    rec = json.loads([l for l in out2.stdout.splitlines()
+                      if l.startswith("{")][0])
+    assert rec["restored"] and rec["watersheds"] == 2
+
+    # reference: restore the full TrainState and eval through the engine
+    cfg = get_config("domst")
+    tc = TrainConfig(learning_rate=1e-3, total_steps=10, warmup_steps=1)
+    eng = Engine.for_domst(cfg, tc, stacked=True)
+    windows = make_domst_windows(2, 120)
+    state = eng.init_state(jax.random.key(0),
+                           domst.init_stacked(cfg, jax.random.key(0), 2))
+    state = eng.restore(ck, state)
+    ev = eng.eval_step(state, eng.place_batch(stacked_test_batch(windows)))
+    np.testing.assert_allclose(np.asarray(rec["nse"]), np.asarray(ev["nse"]),
+                               rtol=1e-4, atol=1e-5)
