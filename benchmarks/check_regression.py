@@ -1,0 +1,140 @@
+"""Bench-regression gate: compare fresh smoke-bench results against the
+committed ``BENCH_*.json`` baselines and fail on a real throughput drop.
+
+    python -m benchmarks.check_regression BENCH_PR2.json=fresh/BENCH_PR2.json \
+        BENCH_PR3.json=fresh/BENCH_PR3.json [--tolerance 0.3]
+
+Each positional argument is ``<committed baseline>=<fresh result>``.  The
+diff is deliberately TOLERANT — keys-only, never schema-strict — so the
+gate survives bench evolution:
+
+  * rows are matched by their ``path`` key (+ ``arch`` when present);
+    rows that exist on only one side are reported but never fail;
+  * only throughput-like keys are compared: ``*_per_s`` plus dimensionless
+    ratios (``speedup``, ``*_ratio``).  Wall-clock-absolute fields
+    (``*_s``, ``*_mib``, counts, shapes) are skipped — they measure the
+    machine and the config, not the code;
+  * absolute ``*_per_s`` keys are only compared when the two files ran in
+    the same environment (``smoke`` flag and ``device_count`` match) and
+    the two rows ran the same workload (all shared config scalars equal);
+    ratio keys are always comparable;
+  * a throughput key regresses when ``fresh < baseline * (1 - tolerance)``
+    — the default 0.3 fails on a >30% drop.  Ratio keys are quotients of
+    two wall-clock timings (noisier by construction), so they use the
+    wider ``--ratio-tolerance`` (default 0.6): a speedup collapsing to
+    less than 40% of its baseline still fails, scheduler jitter does not.
+
+Exit status 1 iff any compared key regresses.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Optional
+
+RATIO_KEYS = ("speedup",)
+RATIO_SUFFIXES = ("_ratio",)
+THROUGHPUT_SUFFIXES = ("_per_s",)
+
+
+def _is_ratio(key: str) -> bool:
+    return key in RATIO_KEYS or key.endswith(RATIO_SUFFIXES)
+
+
+def _is_throughput(key: str) -> bool:
+    return key.endswith(THROUGHPUT_SUFFIXES)
+
+
+def _row_key(row: dict) -> str:
+    return f"{row.get('path', '?')}[{row.get('arch', '-')}]"
+
+
+def _same_workload(a: dict, b: dict) -> bool:
+    """True when every config scalar the two rows share is equal (the
+    throughput numbers then measure the same work)."""
+    for k in set(a) & set(b):
+        if _is_ratio(k) or _is_throughput(k) or k.endswith("_s") \
+                or k.endswith("_mib"):
+            continue
+        if a[k] != b[k]:
+            return False
+    return True
+
+
+def compare_files(base_path: str, fresh_path: str, tolerance: float,
+                  ratio_tolerance: float, out=sys.stdout) -> list:
+    with open(base_path) as f:
+        base = json.load(f)
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    env_match = base.get("smoke") == fresh.get("smoke") \
+        and base.get("device_count") == fresh.get("device_count")
+    base_rows = {_row_key(r): r for r in base.get("rows", [])}
+    regressions = []
+    for row in fresh.get("rows", []):
+        key = _row_key(row)
+        ref = base_rows.get(key)
+        if ref is None:
+            print(f"  {key}: new row (no baseline) — skipped", file=out)
+            continue
+        comparable_abs = env_match and _same_workload(ref, row)
+        for k in sorted(set(ref) & set(row)):
+            if _is_ratio(k):
+                tol = ratio_tolerance                   # always comparable
+            elif _is_throughput(k):
+                if not comparable_abs:
+                    print(f"  {key}.{k}: environment/workload differs — "
+                          f"absolute throughput skipped", file=out)
+                    continue
+                tol = tolerance
+            else:
+                continue                                # config / wall-clock
+            b, f_ = float(ref[k]), float(row[k])
+            floor = b * (1.0 - tol)
+            verdict = "REGRESSION" if f_ < floor else "ok"
+            print(f"  {key}.{k}: baseline={b} fresh={f_} "
+                  f"floor={floor:.3f} -> {verdict}", file=out)
+            if f_ < floor:
+                regressions.append((key, k, b, f_))
+    for key in base_rows:
+        if key not in {_row_key(r) for r in fresh.get("rows", [])}:
+            print(f"  {key}: baseline row missing from fresh results — "
+                  f"skipped", file=out)
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("pairs", nargs="+",
+                    help="<committed baseline>=<fresh result> json pairs")
+    ap.add_argument("--tolerance", type=float, default=0.3,
+                    help="allowed fractional drop before failing "
+                         "(0.3 = fail on >30%% regression)")
+    ap.add_argument("--ratio-tolerance", type=float, default=0.6,
+                    help="wider floor for dimensionless ratio keys, which "
+                         "are quotients of two noisy timings")
+    args = ap.parse_args(argv)
+    all_regressions = []
+    for pair in args.pairs:
+        base_path, _, fresh_path = pair.partition("=")
+        if not fresh_path:
+            ap.error(f"pair '{pair}' is not of the form baseline=fresh")
+        print(f"{base_path} vs {fresh_path}:")
+        all_regressions += compare_files(base_path, fresh_path,
+                                         args.tolerance,
+                                         args.ratio_tolerance)
+    if all_regressions:
+        print(f"\nFAIL: {len(all_regressions)} throughput regression(s) "
+              f"beyond tolerance ({args.tolerance:.0%} absolute, "
+              f"{args.ratio_tolerance:.0%} ratios):")
+        for key, k, b, f_ in all_regressions:
+            print(f"  {key}.{k}: {b} -> {f_} "
+                  f"({(f_ / b - 1) * 100:+.1f}%)")
+        return 1
+    print("\nOK: no throughput regressions beyond tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

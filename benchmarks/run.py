@@ -6,7 +6,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * kernel_*  — Pallas kernel micro-benches vs jnp oracle
   * loader_*  — input-pipeline steps/sec, sync loop vs ShardedLoader prefetch
   * serve_*   — inference engine: prefill vs decode tokens/sec, continuous
-                batching vs sequential requests, Dom-ST forecast rate
+                batching vs sequential requests, paged vs contiguous KV
+                cache, chunked-prefill admission latency, Dom-ST forecast
+                rate
   * roofline_* — summary of the dry-run roofline terms (if results exist)
 
 Full-scale (23-watershed) variants: ``python -m benchmarks.fig3_nse --full``
@@ -81,6 +83,18 @@ def bench_serve() -> None:
                  f"seq={r['sequential_tok_per_s']}tok/s;"
                  f"batched={r['batched_tok_per_s']}tok/s;"
                  f"speedup={r['speedup']}x")
+        elif r["path"] == "serve_paged_vs_contiguous":
+            emit("serve_paged_vs_contiguous",
+                 1e6 / max(r["paged_tok_per_s"], 1e-9),
+                 f"contig={r['contiguous_tok_per_s']}tok/s;"
+                 f"paged={r['paged_tok_per_s']}tok/s;"
+                 f"cache_mem_ratio={r['cache_mem_ratio']}x")
+        elif r["path"] == "serve_admission_latency":
+            emit("serve_admission_latency",
+                 r["chunked_prefill_stall_s"] * 1e6,
+                 f"whole_stall={r['whole_prefill_stall_s']}s;"
+                 f"chunked_stall={r['chunked_prefill_stall_s']}s;"
+                 f"ratio={r['stall_ratio']}x")
         elif r["path"] == "serve_domst_forecast":
             emit("serve_domst_forecast",
                  1e6 / max(r["forecasts_per_s"], 1e-9),

@@ -1,18 +1,27 @@
-"""Serving benchmark (PR 3): prefill vs decode throughput through the
-sharded inference engine, and continuous batching vs sequential requests.
+"""Serving benchmark: prefill vs decode throughput through the sharded
+inference engine, continuous batching vs sequential requests, paged vs
+contiguous KV cache, and chunked-prefill admission latency.
 
-For the LM path the SAME engine and request queue are driven twice —
-``slots=1`` (one request at a time to completion, the pre-PR-3 shape) and
-``slots=N`` (continuous batching: fused all-slot decode, EOS eviction,
-in-place slot reuse) — plus the Dom-ST forecast workload, all recorded to
-``BENCH_PR3.json``:
+Rows recorded to ``BENCH_PR3.json``:
+
+  * ``serve_prefill_vs_decode``     — tokens/sec of the two jitted steps;
+  * ``serve_batched_vs_sequential`` — the same queue at slots=1 vs slots=N;
+  * ``serve_paged_vs_contiguous``   — the same queue through the contiguous
+    slot-major cache and through a page pool sized to live tokens: tok/s
+    plus the KV-cache bytes each layout allocates (the paged pool is
+    decoupled from ``slots * max_len``);
+  * ``serve_admission_latency``     — a long prompt admitted while a
+    victim request decodes: worst inter-token stall the victim sees with
+    whole-prompt prefill vs chunked prefill (``stats["max_decode_gap_s"]``);
+  * ``serve_domst_forecast``        — the Dom-ST rollout workload.
 
     python -m benchmarks.serve_bench [--smoke] [--out BENCH_PR3.json]
 
 ``--smoke`` shrinks sizes for CI; the numbers are honest either way (on a
 shared-core CPU container the batching win is modest — the bench exists
 so the trajectory is tracked, and so real hardware has a ready
-measurement).
+measurement).  ``device_count`` / ``mesh_shape`` record what the engines
+actually ran on (CI forces 8 host devices via XLA_FLAGS).
 """
 from __future__ import annotations
 
@@ -37,21 +46,43 @@ def _make_requests(cfg, n, prompt_len, gen, seed=0):
             for i in range(n)]
 
 
-def _run_queue(cfg, params_key, *, slots, requests, prompt_len, gen):
-    """(scheduler stats, wall seconds) for one served queue."""
+def _cache_bytes(state) -> int:
+    return int(sum(x.nbytes for x in jax.tree.leaves(state.cache)))
+
+
+def _run_queue(cfg, params_key, *, slots, requests, prompt_len, gen,
+               max_len=None, repeats=2, **engine_kw):
+    """Serve the queue ``repeats`` times through one warmed-up engine and
+    keep the best rates (loader_bench-style best-of-N: single-pass
+    timings on a shared-core container swing too much to gate on).
+    Returns ({prefill_tok_per_s, decode_tok_per_s}, best wall s, state)."""
     from repro.models import transformer as tfm
     from repro.serve import InferenceEngine, Scheduler
 
-    engine = InferenceEngine(cfg, slots=slots, max_len=prompt_len + gen)
+    engine = InferenceEngine(cfg, slots=slots,
+                             max_len=max_len or (prompt_len + gen),
+                             **engine_kw)
     state = engine.init_state(tfm.init(cfg, jax.random.key(params_key)))
     sched = Scheduler(engine, state)
     sched.run(_make_requests(cfg, slots, prompt_len, gen))    # compile warmup
-    sched = Scheduler(engine, sched.state)
-    t0 = time.perf_counter()
-    out = sched.run(_make_requests(cfg, requests, prompt_len, gen))
-    wall = time.perf_counter() - t0
-    assert sum(len(g) for g in out.values()) == requests * gen
-    return sched.stats, wall
+    state = sched.state
+    rates = {"prefill_tok_per_s": 0.0, "decode_tok_per_s": 0.0}
+    wall = float("inf")
+    for _ in range(repeats):
+        sched = Scheduler(engine, state)
+        t0 = time.perf_counter()
+        out = sched.run(_make_requests(cfg, requests, prompt_len, gen))
+        wall = min(wall, time.perf_counter() - t0)
+        state = sched.state
+        assert sum(len(g) for g in out.values()) == requests * gen
+        st = sched.stats
+        rates["prefill_tok_per_s"] = max(
+            rates["prefill_tok_per_s"],
+            st["prefill_tokens"] / max(st["prefill_s"], 1e-9))
+        rates["decode_tok_per_s"] = max(
+            rates["decode_tok_per_s"],
+            st["decode_tokens"] / max(st["decode_s"], 1e-9))
+    return rates, wall, state
 
 
 def bench_lm(*, arch: str, slots: int, requests: int, prompt_len: int,
@@ -59,24 +90,100 @@ def bench_lm(*, arch: str, slots: int, requests: int, prompt_len: int,
     from repro.configs import get_config, smoke_variant
 
     cfg = smoke_variant(get_config(arch))
-    st, batched_s = _run_queue(cfg, 0, slots=slots, requests=requests,
-                               prompt_len=prompt_len, gen=gen)
-    _, seq_s = _run_queue(cfg, 0, slots=1, requests=requests,
-                          prompt_len=prompt_len, gen=gen)
+    rates, batched_s, _ = _run_queue(cfg, 0, slots=slots, requests=requests,
+                                     prompt_len=prompt_len, gen=gen)
+    _, seq_s, _ = _run_queue(cfg, 0, slots=1, requests=requests,
+                             prompt_len=prompt_len, gen=gen)
     tokens = requests * gen
     return [
         {"path": "serve_prefill_vs_decode", "arch": cfg.name, "slots": slots,
          "requests": requests, "prompt_len": prompt_len, "gen": gen,
-         "prefill_tok_per_s": round(
-             st["prefill_tokens"] / max(st["prefill_s"], 1e-9), 1),
-         "decode_tok_per_s": round(
-             st["decode_tokens"] / max(st["decode_s"], 1e-9), 1)},
+         "prefill_tok_per_s": round(rates["prefill_tok_per_s"], 1),
+         "decode_tok_per_s": round(rates["decode_tok_per_s"], 1)},
         {"path": "serve_batched_vs_sequential", "arch": cfg.name,
          "slots": slots, "requests": requests, "gen": gen,
          "batched_tok_per_s": round(tokens / batched_s, 1),
          "sequential_tok_per_s": round(tokens / seq_s, 1),
          "speedup": round(seq_s / batched_s, 3)},
     ]
+
+
+def bench_paged(*, arch: str, slots: int, requests: int, prompt_len: int,
+                gen: int, page_size: int) -> dict:
+    """Same queue, contiguous vs paged cache.  ``max_len`` is provisioned
+    4x beyond what the queue needs (a serving config sized for its worst
+    case); the paged pool is sized to the tokens actually live, so the
+    memory row shows the decoupling, and the token streams still match."""
+    from repro.configs import get_config, smoke_variant
+
+    cfg = smoke_variant(get_config(arch))
+    max_len = 4 * (prompt_len + gen)
+    live_pages = slots * (-(-(prompt_len + gen) // page_size))
+    _, contig_s, cstate = _run_queue(
+        cfg, 0, slots=slots, requests=requests, prompt_len=prompt_len,
+        gen=gen, max_len=max_len)
+    _, paged_s, pstate = _run_queue(
+        cfg, 0, slots=slots, requests=requests, prompt_len=prompt_len,
+        gen=gen, max_len=max_len, paged=True, page_size=page_size,
+        num_pages=live_pages)
+    tokens = requests * gen
+    cb, pb = _cache_bytes(cstate), _cache_bytes(pstate)
+    return {"path": "serve_paged_vs_contiguous", "arch": cfg.name,
+            "slots": slots, "requests": requests, "prompt_len": prompt_len,
+            "gen": gen, "max_len": max_len, "page_size": page_size,
+            "num_pages": live_pages,
+            "contiguous_tok_per_s": round(tokens / contig_s, 1),
+            "paged_tok_per_s": round(tokens / paged_s, 1),
+            "contiguous_cache_mib": round(cb / 2**20, 3),
+            "paged_cache_mib": round(pb / 2**20, 3),
+            "cache_mem_ratio": round(cb / max(pb, 1), 3)}
+
+
+def bench_admission(*, arch: str, long_prompt: int, chunk: int,
+                    gen: int) -> dict:
+    """Worst decode stall while a long prompt is admitted mid-stream.
+
+    A victim request streams tokens in one slot; a short request briefly
+    holds the other, and when it finishes, a queued ``long_prompt``-token
+    request is admitted into the freed slot while the victim is still
+    decoding.  Whole-prompt prefill stalls the victim for the entire
+    prefill; chunked prefill bounds each stall to one chunk.
+    ``stats["max_decode_gap_s"]`` is the victim's worst inter-token gap."""
+    from repro.configs import get_config, smoke_variant
+    from repro.models import transformer as tfm
+    from repro.serve import InferenceEngine, Request, Scheduler
+
+    cfg = smoke_variant(get_config(arch))
+    max_len = long_prompt + gen + 4
+
+    def run(prefill_chunk):
+        engine = InferenceEngine(cfg, slots=2, max_len=max_len, paged=True,
+                                 page_size=chunk,
+                                 prefill_chunk=prefill_chunk)
+        state = engine.init_state(tfm.init(cfg, jax.random.key(0)))
+        rng = np.random.default_rng(0)
+        mk = lambda rid, n, g: Request(
+            rid=rid, max_new=g,
+            prompt=rng.integers(0, cfg.vocab_size, n).astype(np.int32))
+        queue = lambda base: [mk(base, 4, gen),         # the victim stream
+                              mk(base + 1, 4, 2),       # frees its slot fast
+                              mk(base + 2, long_prompt, 2)]  # admitted mid-stream
+        sched = Scheduler(engine, state)                # compile warmup
+        sched.run(queue(100))
+        stalls = []
+        for rep in range(2):                            # best-of-2 (CPU noise)
+            sched = Scheduler(engine, sched.state)
+            sched.run(queue(10 * rep))
+            stalls.append(sched.stats["max_decode_gap_s"])
+        return min(stalls)
+
+    whole = run(0)
+    chunked = run(chunk)
+    return {"path": "serve_admission_latency", "arch": cfg.name,
+            "long_prompt": long_prompt, "prefill_chunk": chunk, "gen": gen,
+            "whole_prefill_stall_s": round(whole, 4),
+            "chunked_prefill_stall_s": round(chunked, 4),
+            "stall_ratio": round(whole / max(chunked, 1e-9), 3)}
 
 
 def bench_forecast(*, watersheds: int, days: int) -> dict:
@@ -103,17 +210,37 @@ def bench_forecast(*, watersheds: int, days: int) -> dict:
 
 
 def run(*, smoke: bool = False) -> dict:
+    from repro.launch.mesh import make_host_mesh
+
     if smoke:
         rows = bench_lm(arch="qwen2-1.5b", slots=4, requests=8,
                         prompt_len=12, gen=8)
+        rows.append(bench_paged(arch="qwen2-1.5b", slots=4, requests=8,
+                                prompt_len=12, gen=8, page_size=4))
+        rows.append(bench_admission(arch="qwen2-1.5b", long_prompt=512,
+                                    chunk=32, gen=24))
         rows.append(bench_forecast(watersheds=2, days=120))
     else:
         rows = bench_lm(arch="qwen2-1.5b", slots=8, requests=32,
                         prompt_len=32, gen=24)
+        rows.append(bench_paged(arch="qwen2-1.5b", slots=8, requests=32,
+                                prompt_len=32, gen=24, page_size=8))
+        rows.append(bench_admission(arch="qwen2-1.5b", long_prompt=1024,
+                                    chunk=64, gen=48))
         rows.append(bench_forecast(watersheds=8, days=400))
+    mesh = make_host_mesh()
     return {"bench": "serve_prefill_decode_batching", "smoke": smoke,
             "backend": jax.default_backend(),
-            "device_count": jax.device_count(), "rows": rows}
+            # device_count = host devices actually visible (CI forces 8 via
+            # XLA_FLAGS; the committed baseline once wrongly said 1) — it
+            # identifies the environment, and the regression gate skips
+            # absolute-throughput comparison when it differs.  mesh_shape
+            # is the engines' default host mesh (1x1 on CPU smoke runs —
+            # the mesh tests, not this bench, exercise the 8-way mesh).
+            "device_count": len(jax.devices()),
+            "mesh_shape": {name: int(size) for name, size in
+                           zip(mesh.axis_names, mesh.devices.shape)},
+            "rows": rows}
 
 
 def main() -> None:

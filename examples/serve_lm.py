@@ -1,6 +1,7 @@
 """Batched serving demo: continuous batching through the sharded inference
 engine on a reduced config of each decodable family (dense / MoE / SSM /
-hybrid / VLM) — ragged prompts, EOS-free budgeted generation, slot reuse.
+hybrid / VLM) — ragged prompts, EOS-free budgeted generation, slot reuse,
+and the paged KV cache with chunked prefill (the serving default).
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -19,6 +20,9 @@ class Args:
     prompt_len = 16
     gen = 12
     max_len = 0
+    page_size = 8          # paged KV pool (0 = contiguous slot-major cache)
+    num_pages = 0          # 0 = slots * ceil(max_len / page_size)
+    prefill_chunk = 8      # admit prompts 8 tokens at a time between decodes
     eos = -1
     ragged = True
     ckpt = ""

@@ -85,6 +85,11 @@ def make_rules(cfg=None, *, mesh: Optional[Mesh] = None,
         # heads can't shard there (ffn-mode archs, or kv_heads % ways != 0)
         # so a 32k cache never replicates 16x.
         "cache_seq": model if cache_needs_seq_shard(cfg, mesh, tp) else None,
+        # paged-KV page pool (serve): the page axis distributes over the
+        # batch axes like request slots did, while the within-page offset
+        # axis reuses "cache_seq" above — so both cache_needs_seq_shard
+        # branches carry over to the paged layout unchanged.
+        "pages": batch,
     }
     return rules
 

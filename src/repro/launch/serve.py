@@ -14,10 +14,16 @@ both running through ``repro/serve/``:
     :class:`InferenceEngine`: a jitted donated prefill-insert per request
     (exact prompt length), one fused all-slot decode step per token, EOS /
     budget eviction with in-place slot reuse (``repro.serve.Scheduler``).
-    The whole :class:`InferenceState` (params + KV/recurrent cache + slot
-    position counters) is sharded from the ``distributed/sharding.py``
-    rule tables, so the same script drives the production mesh
-    (decode_32k / long_500k shapes) that the dry-run lowers.
+    The KV cache is PAGED by default (``--page-size``; 0 restores the
+    contiguous slot-major baseline): a pool of fixed-size pages plus
+    per-slot page tables sizes KV memory to live tokens (``--num-pages``)
+    instead of slots * max_len, and ``--prefill-chunk N`` admits long
+    prompts N tokens at a time interleaved with decode steps so admission
+    never stalls in-flight requests.  The whole :class:`InferenceState`
+    (params + cache pool + page tables + slot position counters) is
+    sharded from the ``distributed/sharding.py`` rule tables, so the same
+    script drives the production mesh (decode_32k / long_500k shapes)
+    that the dry-run lowers.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
       --requests 8 --prompt-len 24 --gen 16
@@ -70,7 +76,11 @@ def serve_lm(args) -> dict:
     params = tfm.init(cfg, jax.random.key(args.seed))
     max_len = args.max_len or (args.prompt_len + args.gen
                                + (cfg.num_patches or 0))
-    engine = InferenceEngine(cfg, slots=args.batch_size, max_len=max_len)
+    engine = InferenceEngine(cfg, slots=args.batch_size, max_len=max_len,
+                             paged=args.page_size > 0,
+                             page_size=args.page_size or 16,
+                             num_pages=args.num_pages or None,
+                             prefill_chunk=args.prefill_chunk)
     if args.ckpt:
         params = engine.restore_params(args.ckpt, params)
     state = engine.init_state(params)
@@ -88,7 +98,12 @@ def serve_lm(args) -> dict:
            "prefill_tok_per_s": round(
                st["prefill_tokens"] / max(st["prefill_s"], 1e-9), 1),
            "decode_tok_per_s": round(
-               st["decode_tokens"] / max(st["decode_s"], 1e-9), 1)}
+               st["decode_tokens"] / max(st["decode_s"], 1e-9), 1),
+           "paged": engine.paged, "page_size": engine.page_size,
+           "num_pages": engine.num_pages,
+           "prefill_chunk": engine.prefill_chunk,
+           "prefill_chunks": st["prefill_chunks"],
+           "device_count": len(jax.devices())}
     print(json.dumps(out))
     for r in reqs[:2]:
         print(f"req {r.rid}: {r.generated[:12]}...")
@@ -137,6 +152,16 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=0,
                     help="cache length (0 = prompt+gen+patches)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged KV cache page size in tokens "
+                         "(0 = contiguous slot-major cache)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="page-pool size (0 = slots * ceil(max_len/page); "
+                         "smaller pools size KV memory to live tokens)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="insert long prompts this many tokens at a time, "
+                         "interleaved with decode steps (0 = whole-prompt "
+                         "prefill; requires the paged cache)")
     ap.add_argument("--eos", type=int, default=-1,
                     help="token id ending a request early (-1 = off)")
     ap.add_argument("--ragged", action="store_true",

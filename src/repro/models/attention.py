@@ -331,6 +331,35 @@ def fill_cache_from_prefill(cache: KVCache, k: jax.Array, v: jax.Array) -> KVCac
     return KVCache(new_k, new_v, new_pos)
 
 
+def attend_cached(params, cfg: ModelConfig, q: jax.Array, k_all: jax.Array,
+                  v_all: jax.Array, kp: jax.Array, qpos: jax.Array, *,
+                  window: Optional[int] = None) -> jax.Array:
+    """Masked attention of q (B,Sq,Hq,D) against gathered cache entries
+    k/v (B,L,Hkv,D) whose absolute positions are kp (B,L), -1 = empty.
+    qpos (B,Sq) holds the query positions (causality + window come from the
+    position metadata alone, so ring and paged layouts share this path)."""
+    B, Sq, Hq, dh = q.shape
+    Hkv = k_all.shape[2]
+    G = Hq // Hkv
+    qr = q.reshape(B, Sq, Hkv, G, dh)
+    scale = 1.0 / np.sqrt(dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr,
+                   k_all.astype(q.dtype)).astype(jnp.float32) * scale
+    if cfg.attn_softcap:
+        s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
+    kpb = kp[:, None, None, None, :]                            # (B,1,1,1,L)
+    pq = qpos[:, None, None, :, None]                           # (B,1,1,Sq,1)
+    mask = (kpb >= 0) & (kpb <= pq)
+    if window is not None:
+        mask = mask & (pq - kpb < window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(q.dtype),
+                   v_all.astype(q.dtype))
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, dh)
+    return out_project(params, o)
+
+
 def decode_attention(params, cfg: ModelConfig, x: jax.Array, cache: KVCache,
                      position: jax.Array, *, window: Optional[int] = None):
     """One decode step.  x (B,1,d); position int32 — a scalar (all rows at
@@ -341,7 +370,6 @@ def decode_attention(params, cfg: ModelConfig, x: jax.Array, cache: KVCache,
     Returns (out (B,1,d), new_cache).
     """
     B = x.shape[0]
-    dh = cfg.resolved_head_dim()
     pos = jnp.broadcast_to(
         jnp.atleast_1d(jnp.asarray(position, jnp.int32)), (B,))
     q, k_new, v_new = qkv_project(params, cfg, x, pos[:, None])
@@ -352,26 +380,153 @@ def decode_attention(params, cfg: ModelConfig, x: jax.Array, cache: KVCache,
     new_v = cache.v.at[bidx, slot].set(v_new[:, 0].astype(cache.v.dtype))
     new_pos = cache.pos.at[bidx, slot].set(pos)
     new_cache = KVCache(new_k, new_v, new_pos)
+    out = attend_cached(params, cfg, q, new_cache.k, new_cache.v,
+                        new_cache.pos, pos[:, None], window=window)
+    return out, new_cache
 
-    Hq, Hkv = cfg.num_heads, cfg.num_kv_heads
-    G = Hq // Hkv
-    qr = q.reshape(B, 1, Hkv, G, dh)
-    scale = 1.0 / np.sqrt(dh)
-    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr,
-                   new_cache.k.astype(q.dtype)).astype(jnp.float32) * scale
-    if cfg.attn_softcap:
-        s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
-    kp = new_cache.pos[:, None, None, None, :]                  # (B,1,1,1,L)
-    pq = pos[:, None, None, None, None]                         # (B,1,1,1,1)
-    mask = (kp >= 0) & (kp <= pq)
-    if window is not None:
-        mask = mask & (pq - kp < window)
-    s = jnp.where(mask, s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(q.dtype),
-                   new_cache.v.astype(q.dtype))
-    o = o.transpose(0, 3, 1, 2, 4).reshape(B, 1, Hq, dh)
-    return out_project(params, o), new_cache
+
+# ---------------------------------------------------------------------------
+# Paged KV cache: a pool of fixed-size pages shared by all request slots.
+#
+# Physical layout is (num_pages, page_size, Hkv, D); a slot owns an ordered
+# page row (pages_per_slot,) of physical page ids (-1 = unassigned) mapping
+# logical token index i -> pool[row[i // page_size], i % page_size].  Slot
+# count is therefore decoupled from cache length: the pool is sized to live
+# tokens, not slots * max_len.  Invalid writes are redirected to the
+# out-of-bounds page id ``num_pages`` and dropped by XLA (mode="drop");
+# gathers of unassigned pages fill with position -1, which the shared
+# position mask in ``attend_cached`` already treats as empty.
+# ---------------------------------------------------------------------------
+class PagedKVCache(NamedTuple):
+    k: jax.Array          # (P, page_size, Hkv, D)
+    v: jax.Array          # (P, page_size, Hkv, D)
+    pos: jax.Array        # (P, page_size) absolute position per entry, -1 = empty
+
+
+def paged_kv_cache_axes():
+    # the page-size axis reuses the "cache_seq" rule so the
+    # cache_needs_seq_shard branch (ffn-mode / indivisible kv_heads archs)
+    # shards the pool over "model" exactly like the contiguous ring does
+    return PagedKVCache(
+        k=("pages", "cache_seq", "kv_heads", "head_dim"),
+        v=("pages", "cache_seq", "kv_heads", "head_dim"),
+        pos=("pages", "cache_seq"),
+    )
+
+
+def init_paged_kv_cache(num_pages: int, page_size: int, hkv: int, dh: int,
+                        dtype=jnp.bfloat16) -> PagedKVCache:
+    return PagedKVCache(
+        k=jnp.zeros((num_pages, page_size, hkv, dh), dtype),
+        v=jnp.zeros((num_pages, page_size, hkv, dh), dtype),
+        pos=jnp.full((num_pages, page_size), -1, jnp.int32),
+    )
+
+
+def gather_pages(cache: PagedKVCache, page_rows: jax.Array):
+    """page_rows (B, n) -> (k (B, n*ps, Hkv, D), v, pos (B, n*ps)).
+
+    Unassigned entries (page id -1) gather as empty: k/v fill 0 and pos
+    fills -1, so downstream masking needs no page-validity plumbing."""
+    P, ps, hkv, dh = cache.k.shape
+    B, n = page_rows.shape
+    safe = jnp.where(page_rows >= 0, page_rows, P)              # P = out of bounds
+    k = jnp.take(cache.k, safe, axis=0, mode="fill", fill_value=0)
+    v = jnp.take(cache.v, safe, axis=0, mode="fill", fill_value=0)
+    pos = jnp.take(cache.pos, safe, axis=0, mode="fill", fill_value=-1)
+    return (k.reshape(B, n * ps, hkv, dh), v.reshape(B, n * ps, hkv, dh),
+            pos.reshape(B, n * ps))
+
+
+def _page_coords(page_rows: jax.Array, logical: jax.Array, ps: int, P: int,
+                 extra_ok=None):
+    """Map logical token indices to (physical page, offset) with invalid
+    indices redirected to the droppable out-of-bounds page id ``P``.
+    page_rows (..., n) and logical (...,) share leading dims."""
+    n = page_rows.shape[-1]
+    lp = logical // ps
+    ok = (logical >= 0) & (lp < n)
+    if extra_ok is not None:
+        ok = ok & extra_ok
+    phys = jnp.take_along_axis(page_rows, jnp.clip(lp, 0, n - 1)[..., None],
+                               axis=-1)[..., 0]
+    phys = jnp.where(ok & (phys >= 0), phys, P)
+    return phys, logical % ps, ok
+
+
+def paged_fill_from_prefill(pool: PagedKVCache, ring: KVCache,
+                            page_row: jax.Array) -> PagedKVCache:
+    """Write a single-request contiguous prefill cache ``ring`` (batch 1,
+    ring layout with absolute positions) into the slot's pages of ``pool``
+    — the whole-prompt paged insert reuses ``tfm.prefill`` unchanged."""
+    P, ps = pool.k.shape[0], pool.k.shape[1]
+    pos = ring.pos[0]                                           # (L,) absolute, -1 empty
+    rows = jnp.broadcast_to(page_row, (pos.shape[0],) + page_row.shape)
+    phys, off, ok = _page_coords(rows, pos, ps, P)
+    new_k = pool.k.at[phys, off].set(ring.k[0].astype(pool.k.dtype),
+                                     mode="drop")
+    new_v = pool.v.at[phys, off].set(ring.v[0].astype(pool.v.dtype),
+                                     mode="drop")
+    new_pos = pool.pos.at[phys, off].set(pos, mode="drop")
+    return PagedKVCache(new_k, new_v, new_pos)
+
+
+def paged_decode_attention(params, cfg: ModelConfig, x: jax.Array,
+                           cache: PagedKVCache, page_rows: jax.Array,
+                           position: jax.Array, *,
+                           window: Optional[int] = None,
+                           active: Optional[jax.Array] = None):
+    """One decode step against the page pool.  x (B,1,d); page_rows (B,n)
+    per-slot page tables; position (B,) per-row write index; ``active``
+    (B,) bool — inactive rows (free slots, or slots mid-chunked-prefill)
+    have their writes dropped so they can never clobber a live page.
+
+    Returns (out (B,1,d), new_cache)."""
+    B = x.shape[0]
+    pos = jnp.broadcast_to(
+        jnp.atleast_1d(jnp.asarray(position, jnp.int32)), (B,))
+    q, k_new, v_new = qkv_project(params, cfg, x, pos[:, None])
+    P, ps = cache.k.shape[0], cache.k.shape[1]
+    phys, off, ok = _page_coords(page_rows, pos, ps, P, extra_ok=active)
+    new_k = cache.k.at[phys, off].set(k_new[:, 0].astype(cache.k.dtype),
+                                      mode="drop")
+    new_v = cache.v.at[phys, off].set(v_new[:, 0].astype(cache.v.dtype),
+                                      mode="drop")
+    new_pos = cache.pos.at[phys, off].set(pos, mode="drop")
+    new_cache = PagedKVCache(new_k, new_v, new_pos)
+    k_all, v_all, kp = gather_pages(new_cache, page_rows)
+    out = attend_cached(params, cfg, q, k_all, v_all, kp, pos[:, None],
+                        window=window)
+    return out, new_cache
+
+
+def paged_prefill_attention(params, cfg: ModelConfig, x: jax.Array,
+                            cache: PagedKVCache, page_row: jax.Array,
+                            pos_start: jax.Array, *,
+                            window: Optional[int] = None):
+    """Chunked-prefill attention for ONE request slot.  x (1,C,d) is one
+    prompt chunk starting at absolute position ``pos_start``; the chunk's
+    K/V are written into the slot's pages, then the chunk queries attend
+    against the slot's whole gathered cache (earlier chunks + itself, with
+    intra-chunk causality enforced by the position mask).
+
+    Returns (out (1,C,d), new_cache)."""
+    B, C, _ = x.shape
+    qpos = pos_start + jnp.arange(C, dtype=jnp.int32)           # (C,)
+    q, k_new, v_new = qkv_project(params, cfg, x, qpos[None, :])
+    P, ps = cache.k.shape[0], cache.k.shape[1]
+    rows = jnp.broadcast_to(page_row, (C,) + page_row.shape)
+    phys, off, ok = _page_coords(rows, qpos, ps, P)
+    new_k = cache.k.at[phys, off].set(k_new[0].astype(cache.k.dtype),
+                                      mode="drop")
+    new_v = cache.v.at[phys, off].set(v_new[0].astype(cache.v.dtype),
+                                      mode="drop")
+    new_pos = cache.pos.at[phys, off].set(qpos, mode="drop")
+    new_cache = PagedKVCache(new_k, new_v, new_pos)
+    k_all, v_all, kp = gather_pages(new_cache, page_row[None])
+    out = attend_cached(params, cfg, q, k_all, v_all, kp, qpos[None, :],
+                        window=window)
+    return out, new_cache
 
 
 # ---------------------------------------------------------------------------

@@ -246,27 +246,36 @@ def apply_layer(lp, cfg: ModelConfig, x: jax.Array, kind: LayerKind,
     return x, aux, cache_entry
 
 
-def apply_layer_decode(lp, cfg: ModelConfig, x: jax.Array, kind: LayerKind,
-                       ffn: str, cache_entry, position: jax.Array):
-    """One-token layer step.  Returns (x, new_cache_entry)."""
+def _apply_layer_step(lp, cfg: ModelConfig, x: jax.Array, kind: LayerKind,
+                      ffn: str, mixer_fn):
+    """Shared incremental-layer scaffold (norm -> mixer -> post-norm ->
+    residual -> FFN) for the one-token and chunked paths; ``mixer_fn(lp,
+    kind, h) -> (out, new_cache_entry)`` supplies the cached
+    attention/recurrent step."""
     h = apply_norm(lp["norm1"], cfg.norm, x)
-    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
-        window = cfg.window if kind == ATTN_LOCAL else None
-        out, new_entry = attn_mod.decode_attention(
-            lp["attn"], cfg, h, cache_entry, position, window=window)
-    elif kind == RECURRENT:
-        out, new_entry = rglru_mod.rglru_decode_step(lp["rec"], cfg, h,
-                                                     cache_entry)
-    elif kind == SSM:
-        out, new_entry = ssm_mod.ssm_decode_step(lp["ssm"], cfg, h,
-                                                 cache_entry)
-    else:
-        raise ValueError(kind)
+    out, new_entry = mixer_fn(lp, kind, h)
     if cfg.post_norms:
         out = apply_norm(lp["post_norm1"], cfg.norm, out)
     x = x + out
     x, _ = _apply_ffn(lp, cfg, x, ffn)
     return x, new_entry
+
+
+def apply_layer_decode(lp, cfg: ModelConfig, x: jax.Array, kind: LayerKind,
+                       ffn: str, cache_entry, position: jax.Array):
+    """One-token layer step.  Returns (x, new_cache_entry)."""
+    def mixer(lp_, kind_, h):
+        if kind_ in (ATTN_GLOBAL, ATTN_LOCAL):
+            window = cfg.window if kind_ == ATTN_LOCAL else None
+            return attn_mod.decode_attention(
+                lp_["attn"], cfg, h, cache_entry, position, window=window)
+        if kind_ == RECURRENT:
+            return rglru_mod.rglru_decode_step(lp_["rec"], cfg, h,
+                                               cache_entry)
+        if kind_ == SSM:
+            return ssm_mod.ssm_decode_step(lp_["ssm"], cfg, h, cache_entry)
+        raise ValueError(kind_)
+    return _apply_layer_step(lp, cfg, x, kind, ffn, mixer)
 
 
 # ---------------------------------------------------------------------------
@@ -410,6 +419,53 @@ def prefill(params, cfg: ModelConfig, inputs: Dict[str, jax.Array],
     return logits, caches
 
 
+def _decode_walk(params, cfg: ModelConfig, x: jax.Array, caches, layer_fn):
+    """Shared prefix / scanned-blocks / suffix traversal for the one-token
+    and chunked incremental paths.  ``layer_fn(lp, kind, ffn, cache_entry,
+    x) -> (x, new_entry)`` supplies the per-layer step (contiguous decode,
+    paged decode, or paged chunk prefill)."""
+    prefix, pat, n_rep, suffix = stack_plan(cfg)
+    new_caches: Dict[str, Any] = {}
+
+    if prefix:
+        entries = []
+        for lp, kind, ce in zip(params["prefix"], prefix, caches["prefix"]):
+            x, ne = layer_fn(lp, kind, _ffn_kind(cfg, kind, in_prefix=True),
+                             ce, x)
+            entries.append(ne)
+        new_caches["prefix"] = tuple(entries)
+
+    if n_rep:
+        def body(xx, inp):
+            block_p, block_c = inp
+            entries = []
+            for i, kind in enumerate(pat):
+                xx, ne = layer_fn(block_p[str(i)], kind,
+                                  _ffn_kind(cfg, kind, in_prefix=False),
+                                  block_c[str(i)], xx)
+                entries.append(ne)
+            return xx, {str(i): e for i, e in enumerate(entries)}
+        x, block_caches = jax.lax.scan(
+            body, x, (params["blocks"], caches["blocks"]),
+            unroll=_scan_unroll())
+        new_caches["blocks"] = block_caches
+
+    if suffix:
+        entries = []
+        for lp, kind, ce in zip(params["suffix"], suffix, caches["suffix"]):
+            x, ne = layer_fn(lp, kind, _ffn_kind(cfg, kind, in_prefix=False),
+                             ce, x)
+            entries.append(ne)
+        new_caches["suffix"] = tuple(entries)
+    return x, new_caches
+
+
+def _finish_logits(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = apply_norm(params["final_norm"], cfg.norm, x)
+    return unembed(params["embed"], x, tie=cfg.tie_embeddings,
+                   cap=cfg.logit_softcap, real_vocab=cfg.vocab_size)
+
+
 def decode_step(params, cfg: ModelConfig, inputs: Dict[str, jax.Array],
                 caches, position: jax.Array, *, dtype=jnp.bfloat16):
     """One decode step: token (B,1) + caches -> (logits (B,V), new caches).
@@ -422,47 +478,159 @@ def decode_step(params, cfg: ModelConfig, inputs: Dict[str, jax.Array],
     x = embed_inputs(params, cfg, inputs, dtype)
     if cfg.contribution_gate:
         x = contribution_gate(params["gate"], x)
-    prefix, pat, n_rep, suffix = stack_plan(cfg)
-    new_caches: Dict[str, Any] = {}
 
-    if prefix:
-        entries = []
-        for lp, kind, ce in zip(params["prefix"], prefix, caches["prefix"]):
-            x, ne = apply_layer_decode(
-                lp, cfg, x, kind, _ffn_kind(cfg, kind, in_prefix=True),
-                ce, position)
-            entries.append(ne)
-        new_caches["prefix"] = tuple(entries)
+    def layer_fn(lp, kind, ffn, ce, xx):
+        return apply_layer_decode(lp, cfg, xx, kind, ffn, ce, position)
 
-    if n_rep:
-        def body(xx, inp):
-            block_p, block_c = inp
-            entries = []
-            for i, kind in enumerate(pat):
-                xx, ne = apply_layer_decode(
-                    block_p[str(i)], cfg, xx, kind,
-                    _ffn_kind(cfg, kind, in_prefix=False),
-                    block_c[str(i)], position)
-                entries.append(ne)
-            return xx, {str(i): e for i, e in enumerate(entries)}
-        x, block_caches = jax.lax.scan(
-            body, x, (params["blocks"], caches["blocks"]),
-            unroll=_scan_unroll())
-        new_caches["blocks"] = block_caches
-
-    if suffix:
-        entries = []
-        for lp, kind, ce in zip(params["suffix"], suffix, caches["suffix"]):
-            x, ne = apply_layer_decode(
-                lp, cfg, x, kind, _ffn_kind(cfg, kind, in_prefix=False),
-                ce, position)
-            entries.append(ne)
-        new_caches["suffix"] = tuple(entries)
-
-    x = apply_norm(params["final_norm"], cfg.norm, x)
-    logits = unembed(params["embed"], x, tie=cfg.tie_embeddings,
-                     cap=cfg.logit_softcap, real_vocab=cfg.vocab_size)[:, 0]
+    x, new_caches = _decode_walk(params, cfg, x, caches, layer_fn)
+    logits = _finish_logits(params, cfg, x)[:, 0]
     return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Paged decode / chunked prefill
+#
+# Attention layers read and write a shared page pool through per-slot page
+# tables (models/attention.py); recurrent and SSM layers keep their O(1)
+# slot-major state — paging only applies where memory grows with context.
+# ---------------------------------------------------------------------------
+def _mask_state_update(new_entry, old_entry, active: jax.Array):
+    """Keep ``old_entry`` rows where ``active`` (S,) is False, so the fused
+    all-slot decode step cannot advance the recurrent state of a free slot
+    or of a slot that is mid-chunked-prefill."""
+    def _sel(n, o):
+        m = active.reshape((-1,) + (1,) * (n.ndim - 1))
+        return jnp.where(m, n.astype(o.dtype), o)
+    return jax.tree.map(_sel, new_entry, old_entry)
+
+
+def decode_step_paged(params, cfg: ModelConfig, inputs: Dict[str, jax.Array],
+                      caches, position: jax.Array, page_table: jax.Array,
+                      active: jax.Array, *, dtype=jnp.bfloat16):
+    """Fused all-slot decode against the paged cache.  ``page_table``
+    (S, pages_per_slot) int32 physical page ids per slot (-1 unassigned);
+    ``active`` (S,) bool gates every state write — inactive slots neither
+    write KV pages nor advance recurrent state."""
+    x = embed_inputs(params, cfg, inputs, dtype)
+    if cfg.contribution_gate:
+        x = contribution_gate(params["gate"], x)
+
+    def layer_fn(lp, kind, ffn, ce, xx):
+        def mixer(lp_, kind_, h):
+            if kind_ in (ATTN_GLOBAL, ATTN_LOCAL):
+                window = cfg.window if kind_ == ATTN_LOCAL else None
+                return attn_mod.paged_decode_attention(
+                    lp_["attn"], cfg, h, ce, page_table, position,
+                    window=window, active=active)
+            if kind_ == RECURRENT:
+                out, ne = rglru_mod.rglru_decode_step(lp_["rec"], cfg, h, ce)
+            elif kind_ == SSM:
+                out, ne = ssm_mod.ssm_decode_step(lp_["ssm"], cfg, h, ce)
+            else:
+                raise ValueError(kind_)
+            return out, _mask_state_update(ne, ce, active)
+        return _apply_layer_step(lp, cfg, xx, kind, ffn, mixer)
+
+    x, new_caches = _decode_walk(params, cfg, x, caches, layer_fn)
+    logits = _finish_logits(params, cfg, x)[:, 0]
+    return logits, new_caches
+
+
+def _chunk_recurrent(step_fn, lp, cfg: ModelConfig, x: jax.Array, entry,
+                     slot: jax.Array, pos_start: jax.Array):
+    """Run a one-token recurrent/SSM step over a chunk for ONE slot: slice
+    the slot's state row, scan the step over the chunk tokens (recurrence
+    is inherently sequential), write the final state back in place.  The
+    first chunk of a prompt (pos_start == 0) starts the recurrence from
+    zeros — the slot row may hold stale state from an evicted request."""
+    st = jax.tree.map(
+        lambda s: jax.lax.dynamic_slice_in_dim(s, slot, 1, axis=0), entry)
+    st = jax.tree.map(
+        lambda s: jnp.where(pos_start == 0, jnp.zeros_like(s), s), st)
+
+    def body(carry, xt):                    # xt (1, d) — one chunk token
+        out_t, ns = step_fn(lp, cfg, xt[:, None, :], carry)
+        return ns, out_t[:, 0]
+
+    st_new, outs = jax.lax.scan(body, st, x.swapaxes(0, 1))
+    new_entry = jax.tree.map(
+        lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+            full, one.astype(full.dtype), slot, axis=0), entry, st_new)
+    return outs.swapaxes(0, 1), new_entry
+
+
+def prefill_chunk(params, cfg: ModelConfig, inputs: Dict[str, jax.Array],
+                  caches, page_row: jax.Array, slot: jax.Array,
+                  pos_start: jax.Array, *, dtype=jnp.bfloat16):
+    """One chunked-prefill step for ONE request slot.  ``inputs["tokens"]``
+    (1, C) is the chunk starting at absolute position ``pos_start``; KV is
+    written into the slot's pages and recurrent state advances in the
+    slot's row, so admission interleaves with fused decode steps without
+    touching any other slot.  Returns (last-token logits (1, V), caches).
+    """
+    x = embed_inputs(params, cfg, inputs, dtype)
+    if cfg.contribution_gate:
+        x = contribution_gate(params["gate"], x)
+
+    def layer_fn(lp, kind, ffn, ce, xx):
+        def mixer(lp_, kind_, h):
+            if kind_ in (ATTN_GLOBAL, ATTN_LOCAL):
+                window = cfg.window if kind_ == ATTN_LOCAL else None
+                return attn_mod.paged_prefill_attention(
+                    lp_["attn"], cfg, h, ce, page_row, pos_start,
+                    window=window)
+            if kind_ == RECURRENT:
+                return _chunk_recurrent(rglru_mod.rglru_decode_step,
+                                        lp_["rec"], cfg, h, ce, slot,
+                                        pos_start)
+            if kind_ == SSM:
+                return _chunk_recurrent(ssm_mod.ssm_decode_step,
+                                        lp_["ssm"], cfg, h, ce, slot,
+                                        pos_start)
+            raise ValueError(kind_)
+        return _apply_layer_step(lp, cfg, xx, kind, ffn, mixer)
+
+    x, new_caches = _decode_walk(params, cfg, x, caches, layer_fn)
+    logits = _finish_logits(params, cfg, x)[:, -1]
+    return logits, new_caches
+
+
+def scatter_prefill_paged(cfg: ModelConfig, paged_caches, prefill_caches,
+                          page_row: jax.Array, slot: jax.Array):
+    """Write a whole-prompt prefill cache (from ``prefill``, batch 1) into
+    the paged state: KV rings map into the slot's pages, recurrent/SSM
+    state scatters into the slot's row.  KVCache and PagedKVCache trees
+    differ structurally, so this walks the stack plan entry by entry."""
+    prefix, pat, n_rep, suffix = stack_plan(cfg)
+
+    def one(kind, pooled, fresh, stacked: bool):
+        if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+            if stacked:                     # leading layer-repetition axis
+                return jax.vmap(
+                    lambda p, f: attn_mod.paged_fill_from_prefill(
+                        p, f, page_row))(pooled, fresh)
+            return attn_mod.paged_fill_from_prefill(pooled, fresh, page_row)
+        ax = 1 if stacked else 0
+        return jax.tree.map(
+            lambda full, onearr: jax.lax.dynamic_update_slice_in_dim(
+                full, onearr.astype(full.dtype), slot, axis=ax),
+            pooled, fresh)
+
+    out: Dict[str, Any] = {}
+    if prefix:
+        out["prefix"] = tuple(
+            one(kind, paged_caches["prefix"][i], prefill_caches["prefix"][i],
+                False) for i, kind in enumerate(prefix))
+    if n_rep:
+        out["blocks"] = {
+            str(i): one(kind, paged_caches["blocks"][str(i)],
+                        prefill_caches["blocks"][str(i)], True)
+            for i, kind in enumerate(pat)}
+    if suffix:
+        out["suffix"] = tuple(
+            one(kind, paged_caches["suffix"][i], prefill_caches["suffix"][i],
+                False) for i, kind in enumerate(suffix))
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -523,4 +691,64 @@ def cache_axes(cfg: ModelConfig):
                                         is_leaf=is_axes)
     if suffix:
         caches["suffix"] = tuple(_layer_cache_axes(cfg, k) for k in suffix)
+    return caches
+
+
+def _layer_paged_cache(cfg: ModelConfig, kind: LayerKind, slots: int,
+                       num_pages: int, page_size: int, dtype):
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        return attn_mod.init_paged_kv_cache(
+            num_pages, page_size, cfg.num_kv_heads, cfg.resolved_head_dim(),
+            dtype)
+    return _layer_cache(cfg, kind, slots, 0, dtype)
+
+
+def init_paged_cache(cfg: ModelConfig, slots: int, num_pages: int,
+                     page_size: int, dtype=jnp.bfloat16):
+    """Paged twin of ``init_cache``: attention layers hold a page pool of
+    ``num_pages`` pages (slot count decoupled from cache length — memory
+    scales with live tokens); recurrent/SSM layers keep O(1) slot-major
+    state."""
+    prefix, pat, n_rep, suffix = stack_plan(cfg)
+    caches: Dict[str, Any] = {}
+    if prefix:
+        caches["prefix"] = tuple(
+            _layer_paged_cache(cfg, k, slots, num_pages, page_size, dtype)
+            for k in prefix)
+    if n_rep:
+        block = {str(i): _layer_paged_cache(cfg, k, slots, num_pages,
+                                            page_size, dtype)
+                 for i, k in enumerate(pat)}
+        caches["blocks"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_rep,) + a.shape), block)
+    if suffix:
+        caches["suffix"] = tuple(
+            _layer_paged_cache(cfg, k, slots, num_pages, page_size, dtype)
+            for k in suffix)
+    return caches
+
+
+def _layer_paged_cache_axes(cfg: ModelConfig, kind: LayerKind):
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        return attn_mod.paged_kv_cache_axes()
+    return _layer_cache_axes(cfg, kind)
+
+
+def paged_cache_axes(cfg: ModelConfig):
+    """Logical-axes pytree matching init_paged_cache structure."""
+    prefix, pat, n_rep, suffix = stack_plan(cfg)
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    caches: Dict[str, Any] = {}
+    if prefix:
+        caches["prefix"] = tuple(
+            _layer_paged_cache_axes(cfg, k) for k in prefix)
+    if n_rep:
+        block = {str(i): _layer_paged_cache_axes(cfg, k)
+                 for i, k in enumerate(pat)}
+        caches["blocks"] = jax.tree.map(lambda ax: (None,) + ax, block,
+                                        is_leaf=is_axes)
+    if suffix:
+        caches["suffix"] = tuple(
+            _layer_paged_cache_axes(cfg, k) for k in suffix)
     return caches

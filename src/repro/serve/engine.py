@@ -14,6 +14,12 @@ reuse):
     scatter its cache into a free slot of the slot-major state;
   * a jitted, donated decode step over ALL slots at once, each advancing
     its own position counter (ragged prompt lengths coexist in one batch);
+  * optionally a PAGED cache (``paged=True``): a fixed-size page pool +
+    per-slot page tables decouple slot count from ``max_len`` (KV memory
+    follows live tokens), and ``prefill_chunk`` admits long prompts chunk
+    by chunk through ``insert_chunk`` so the scheduler can interleave
+    admission with decode — the contiguous layout stays available as the
+    parity baseline;
   * the trained-checkpoint hand-off: ``from_train_state`` adopts a live
     ``TrainState.params`` without gathering to host, and
     ``restore_params`` rebuilds only the params subtree of a TrainState
@@ -31,6 +37,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
 
+import numpy as np
+
 from repro import checkpoint as ckpt
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import (
@@ -38,17 +46,26 @@ from repro.distributed.sharding import (
 )
 from repro.models import transformer as tfm
 from repro.serve.state import (
-    InferenceState, inference_state_axes, new_inference_state, scatter_slot,
+    InferenceState, clear_pages, inference_state_axes, new_inference_state,
+    new_paged_inference_state, paged_inference_state_axes, scatter_slot,
 )
 
 
 class InferenceEngine:
-    """Sharded, donated prefill/decode step factory over request slots."""
+    """Sharded, donated prefill/decode step factory over request slots.
+
+    ``paged=True`` swaps the slot-major KV rings for a page pool + per-slot
+    page tables (slot count decoupled from ``max_len``; ``num_pages`` sizes
+    KV memory to live tokens) and unlocks ``prefill_chunk``: long prompts
+    are inserted ``prefill_chunk`` tokens at a time via :meth:`insert_chunk`
+    so the scheduler can interleave admission with fused decode steps."""
 
     def __init__(self, cfg: ModelConfig, *, mesh=None, slots: int = 4,
                  max_len: int = 64, dtype=jnp.bfloat16,
                  rules: Optional[dict] = None, donate: bool = True,
-                 explicit_shardings: bool = True):
+                 explicit_shardings: bool = True, paged: bool = False,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 prefill_chunk: int = 0):
         if not cfg.supports_decode():
             raise ValueError(f"{cfg.name} has no decode path")
         self.cfg = cfg
@@ -56,14 +73,31 @@ class InferenceEngine:
         self.max_len = int(max_len)
         self.dtype = dtype
         self.donate = donate
+        self.paged = bool(paged)
+        self.prefill_chunk = int(prefill_chunk)
+        if self.prefill_chunk and not self.paged:
+            raise ValueError("prefill_chunk requires the paged cache "
+                             "(chunks are written into page tables)")
         # mesh and rules are built LAZILY, mirroring train.Engine: never
         # touch jax device state before the launcher injects XLA_FLAGS
         self._mesh = mesh
         self._rules = rules
         self._explicit = explicit_shardings
-        self._axes = inference_state_axes(cfg)
-        self._cache_axes = tfm.cache_axes(cfg)
+        if self.paged:
+            if page_size < 1:
+                raise ValueError(f"page_size must be >= 1, got {page_size}")
+            self.page_size = int(page_size)
+            self.pages_per_slot = -(-self.max_len // self.page_size)
+            self.num_pages = int(num_pages) if num_pages \
+                else self.slots * self.pages_per_slot
+            self._axes = paged_inference_state_axes(cfg)
+            self._cache_axes = tfm.paged_cache_axes(cfg)
+        else:
+            self.page_size = self.pages_per_slot = self.num_pages = None
+            self._axes = inference_state_axes(cfg)
+            self._cache_axes = tfm.cache_axes(cfg)
         self._jit_cache: dict = {}
+        self._state_shardings = None
 
     @property
     def mesh(self):
@@ -87,11 +121,50 @@ class InferenceEngine:
         must be done with it, and when the shardings already match — the
         ``from_train_state`` path — the device_put is a no-op and the
         weights never return to host."""
-        state = new_inference_state(params, self.cfg, slots=self.slots,
-                                    max_len=self.max_len, dtype=self.dtype)
+        if self.paged:
+            state = new_paged_inference_state(
+                params, self.cfg, slots=self.slots, num_pages=self.num_pages,
+                pages_per_slot=self.pages_per_slot, page_size=self.page_size,
+                dtype=self.dtype)
+        else:
+            state = new_inference_state(params, self.cfg, slots=self.slots,
+                                        max_len=self.max_len,
+                                        dtype=self.dtype)
         if self._explicit:
             state = jax.device_put(state, self.state_shardings(state))
         return state
+
+    def assign_pages(self, state: InferenceState, slot: int,
+                     pages) -> InferenceState:
+        """Install ``pages`` (an ordered list of physical page ids from the
+        scheduler's free list) as ``slot``'s page row, and reset those
+        pages' position metadata in every layer pool — a page recycled
+        from an evicted request must never leak stale entries into its new
+        owner's attention mask.  Host-side policy hook, outside the jitted
+        steps."""
+        assert self.paged, "assign_pages is a paged-mode operation"
+        row = np.full((self.pages_per_slot,), -1, np.int32)
+        row[:len(pages)] = pages
+        table = state.page_table.at[slot].set(jnp.asarray(row))
+        cache = clear_pages(self._cache_axes, state.cache,
+                            jnp.asarray(pages, jnp.int32), self.num_pages)
+        if self._explicit:
+            # re-place only what this host-side update touched — the params
+            # subtree (hundreds of leaves) is untouched and stays put
+            sh = self.state_shardings(state)
+            cache = jax.device_put(cache, sh.cache)
+            table = jax.device_put(table, sh.page_table)
+        return state._replace(cache=cache, page_table=table)
+
+    def release_pages(self, state: InferenceState,
+                      slot: int) -> InferenceState:
+        """Clear ``slot``'s page row on eviction.  The freed pages may be
+        handed to another request immediately, and a cleared row (-1)
+        turns any later write through this slot — e.g. a mask-free
+        ``decode(state)`` — into a dropped out-of-bounds scatter instead
+        of a silent write into the new owner's pages."""
+        assert self.paged, "release_pages is a paged-mode operation"
+        return state._replace(page_table=state.page_table.at[slot].set(-1))
 
     @classmethod
     def from_train_state(cls, train_engine, train_state, *, slots: int = 4,
@@ -116,8 +189,14 @@ class InferenceEngine:
 
     # -- sharding resolution -----------------------------------------------
     def state_shardings(self, state: InferenceState) -> InferenceState:
-        """NamedSharding tree matching ``state`` from the rule tables."""
-        return tree_shardings(self._axes, state, self.mesh, self.rules)
+        """NamedSharding tree matching ``state`` from the rule tables.
+        Cached after the first resolution — the engine's state shapes are
+        fixed, and admissions (``assign_pages``) re-place the state on
+        every request."""
+        if self._state_shardings is None:
+            self._state_shardings = tree_shardings(self._axes, state,
+                                                   self.mesh, self.rules)
+        return self._state_shardings
 
     def _input_shardings(self, inputs: Dict[str, jax.Array]):
         out = {}
@@ -127,7 +206,7 @@ class InferenceEngine:
                 axes, jnp.shape(v), self.mesh, self.rules))
         return out
 
-    # -- the two steps -----------------------------------------------------
+    # -- the steps ---------------------------------------------------------
     def _insert_fn(self, state: InferenceState, inputs: Dict[str, jax.Array],
                    slot: jax.Array):
         logits, cache_one = tfm.prefill(state.params, self.cfg, inputs,
@@ -136,11 +215,31 @@ class InferenceEngine:
         tok = jnp.argmax(logits, -1).astype(jnp.int32)          # (1,)
         total = inputs["tokens"].shape[1] + (
             inputs["patches"].shape[1] if "patches" in inputs else 0)
-        return InferenceState(
-            params=state.params,
-            cache=scatter_slot(self._cache_axes, state.cache, cache_one,
-                               slot),
+        if self.paged:
+            # same exact-length prefill; the ring cache scatters into the
+            # slot's pages instead of a slot row
+            cache = tfm.scatter_prefill_paged(
+                self.cfg, state.cache, cache_one, state.page_table[slot],
+                slot)
+        else:
+            cache = scatter_slot(self._cache_axes, state.cache, cache_one,
+                                 slot)
+        return state._replace(
+            cache=cache,
             positions=state.positions.at[slot].set(total),
+            last_tok=state.last_tok.at[slot].set(tok[0]),
+        ), tok
+
+    def _chunk_fn(self, state: InferenceState, inputs: Dict[str, jax.Array],
+                  slot: jax.Array, pos_start: jax.Array):
+        logits, cache = tfm.prefill_chunk(
+            state.params, self.cfg, inputs, state.cache,
+            state.page_table[slot], slot, pos_start, dtype=self.dtype)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)          # (1,)
+        end = pos_start + inputs["tokens"].shape[1]
+        return state._replace(
+            cache=cache,
+            positions=state.positions.at[slot].set(end),
             last_tok=state.last_tok.at[slot].set(tok[0]),
         ), tok
 
@@ -149,8 +248,24 @@ class InferenceEngine:
             state.params, self.cfg, {"tokens": state.last_tok[:, None]},
             state.cache, state.positions, dtype=self.dtype)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)          # (slots,)
-        return InferenceState(state.params, cache, state.positions + 1,
-                              tok), tok
+        return state._replace(cache=cache, positions=state.positions + 1,
+                              last_tok=tok), tok
+
+    def _decode_paged_fn(self, state: InferenceState, active: jax.Array):
+        logits, cache = tfm.decode_step_paged(
+            state.params, self.cfg, {"tokens": state.last_tok[:, None]},
+            state.cache, state.positions, state.page_table, active,
+            dtype=self.dtype)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)          # (slots,)
+        return state._replace(
+            cache=cache,
+            positions=state.positions + active.astype(jnp.int32),
+            last_tok=jnp.where(active, tok, state.last_tok),
+        ), tok
+
+    def _active_sharding(self):
+        return NamedSharding(self.mesh, resolve_pspec(
+            ("batch",), (self.slots,), self.mesh, self.rules))
 
     def _get_jit(self, kind: str, state, inputs=None):
         key = (kind,) + (tuple(sorted(
@@ -158,46 +273,79 @@ class InferenceEngine:
             for k, v in inputs.items())) if inputs else ())
         jfn = self._jit_cache.get(key)
         if jfn is None:
+            fns = {"insert": self._insert_fn, "chunk": self._chunk_fn,
+                   "decode": self._decode_fn,
+                   "decode_paged": self._decode_paged_fn}
+            fn = fns[kind]
             donate = (0,) if self.donate else ()
             if not self._explicit:
-                fn = self._insert_fn if kind == "insert" else self._decode_fn
                 jfn = jax.jit(fn, donate_argnums=donate)
             else:
                 st_sh = self.state_shardings(state)
                 if kind == "insert":
-                    jfn = jax.jit(
-                        self._insert_fn,
-                        in_shardings=(st_sh, self._input_shardings(inputs),
-                                      None),
-                        out_shardings=(st_sh, None),
-                        donate_argnums=donate)
+                    in_sh = (st_sh, self._input_shardings(inputs), None)
+                elif kind == "chunk":
+                    in_sh = (st_sh, self._input_shardings(inputs), None, None)
+                elif kind == "decode":
+                    in_sh = (st_sh,)
                 else:
-                    jfn = jax.jit(self._decode_fn,
-                                  in_shardings=(st_sh,),
-                                  out_shardings=(st_sh, None),
-                                  donate_argnums=donate)
+                    in_sh = (st_sh, self._active_sharding())
+                jfn = jax.jit(fn, in_shardings=in_sh,
+                              out_shardings=(st_sh, None),
+                              donate_argnums=donate)
             self._jit_cache[key] = jfn
         return jfn
+
+    def _run(self, jfn, *args):
+        if not self._explicit:
+            return jfn(*args)
+        with self.mesh, logical_sharding(self.mesh, self.rules):
+            return jfn(*args)
 
     def insert(self, state: InferenceState, inputs: Dict[str, jax.Array],
                slot: int):
         """Prefill ONE request (tokens (1, L), exact length — plus patches
         for VLM archs) into slot ``slot``.  Returns (state, first greedy
-        token (1,)).  Jit-cached per distinct prompt shape."""
+        token (1,)).  Jit-cached per distinct prompt shape.  In paged mode
+        the slot's page row must already be installed (``assign_pages``)."""
         inputs = {k: jnp.asarray(v) for k, v in inputs.items()}
         jfn = self._get_jit("insert", state, inputs)
-        slot = jnp.asarray(slot, jnp.int32)
-        if not self._explicit:
-            return jfn(state, inputs, slot)
-        with self.mesh, logical_sharding(self.mesh, self.rules):
-            return jfn(state, inputs, slot)
+        return self._run(jfn, state, inputs, jnp.asarray(slot, jnp.int32))
 
-    def decode(self, state: InferenceState):
+    def insert_chunk(self, state: InferenceState,
+                     inputs: Dict[str, jax.Array], slot: int,
+                     pos_start: int):
+        """Insert ONE prompt chunk (tokens (1, C)) starting at absolute
+        position ``pos_start`` into slot ``slot``'s pages.  Returns
+        (state, greedy token (1,)) — the token is meaningful only for the
+        final chunk of a prompt.  Jit-cached per chunk shape, so a prompt
+        split into fixed-size chunks compiles twice at most (body +
+        remainder)."""
+        assert self.paged, "insert_chunk requires the paged cache"
+        inputs = {k: jnp.asarray(v) for k, v in inputs.items()}
+        jfn = self._get_jit("chunk", state, inputs)
+        return self._run(jfn, state, inputs, jnp.asarray(slot, jnp.int32),
+                         jnp.asarray(pos_start, jnp.int32))
+
+    def decode(self, state: InferenceState, active=None):
         """One decode step over ALL slots: each slot's last token advances
         its own position counter.  Returns (state, greedy tokens (slots,));
-        free slots produce garbage tokens the scheduler ignores."""
+        free slots produce garbage tokens the scheduler ignores.
+
+        In paged mode ``active`` (slots,) bool gates all writes: inactive
+        slots neither touch the page pool nor advance their counters.
+        Mask-free calls are safe against evicted slots (``release_pages``
+        clears their page rows, turning stray writes into dropped
+        scatters), but the mask is REQUIRED while any slot is
+        mid-chunked-prefill — only the caller knows those slots, and an
+        unmasked decode would advance their recurrent state."""
+        if self.paged:
+            if active is None:
+                active = np.ones((self.slots,), bool)
+            jfn = self._get_jit("decode_paged", state)
+            return self._run(jfn, state, jnp.asarray(active, bool))
+        if active is not None:
+            raise ValueError("active masks are a paged-mode feature; the "
+                             "contiguous decode advances every slot")
         jfn = self._get_jit("decode", state)
-        if not self._explicit:
-            return jfn(state)
-        with self.mesh, logical_sharding(self.mesh, self.rules):
-            return jfn(state)
+        return self._run(jfn, state)

@@ -1,17 +1,29 @@
 """Continuous batching over the inference engine's request slots.
 
 The scheduler owns the batching POLICY the engine deliberately excludes:
-admit a pending request into any free slot (one jitted prefill-insert at
-its exact prompt length), run the fused all-slot decode step, harvest
-each active slot's token, and evict a slot the moment its request
-finishes — EOS token or per-request ``max_new`` budget — so the next
-pending request reuses it without reshaping the state.
+admit a pending request into any free slot, run the fused all-slot decode
+step, harvest each active slot's token, and evict a slot the moment its
+request finishes — EOS token or per-request ``max_new`` budget — so the
+next pending request reuses it without reshaping the state.
+
+Paged engines add two policy layers:
+
+  * a host-side free list of physical pages — admission also claims
+    ``ceil((patches + prompt + max_new) / page_size)`` pages for the slot
+    (installed via ``engine.assign_pages``) and eviction returns them, so
+    KV memory follows live tokens, not ``slots * max_len``;
+  * an ADMISSION QUEUE for chunked prefill: a long prompt is inserted
+    ``engine.prefill_chunk`` tokens at a time, one chunk per scheduler
+    iteration, alternating with the fused all-slot decode step — admitting
+    a long request no longer stalls in-flight decodes for the whole
+    prompt's prefill.  ``stats["max_decode_gap_s"]`` records the worst
+    stall in-flight decodes actually experienced.
 
 Each slot's computation is independent of its neighbours (attention,
 recurrent state and MoE routing are all per-row), so a request's greedy
 output is a function of its prompt alone: deterministic under any
-arrival order, slot assignment, or co-batched traffic — the property
-``tests/test_serve.py`` pins.
+arrival order, slot assignment, co-batched traffic, or prefill chunking
+— the property ``tests/test_serve.py`` pins.
 """
 from __future__ import annotations
 
@@ -36,6 +48,14 @@ class Request:
     slot: Optional[int] = None              # last slot served in (telemetry)
 
 
+@dataclass
+class _Admission:
+    """A request whose prompt is being chunk-prefilled into its slot."""
+    r: Request
+    slot: int
+    cursor: int = 0                         # prompt tokens inserted so far
+
+
 class Scheduler:
     """Drives an :class:`InferenceEngine` over a queue of requests."""
 
@@ -48,7 +68,13 @@ class Scheduler:
         self.slot_history: Dict[int, List[int]] = {
             s: [] for s in range(engine.slots)}
         self.stats = {"prefill_tokens": 0, "prefill_s": 0.0,
-                      "decode_tokens": 0, "decode_s": 0.0, "decode_steps": 0}
+                      "prefill_chunks": 0,
+                      "decode_tokens": 0, "decode_s": 0.0, "decode_steps": 0,
+                      "max_decode_gap_s": 0.0}
+        self._free_pages = deque(range(engine.num_pages)) \
+            if engine.paged else None
+        self._slot_pages: Dict[int, list] = {}
+        self._last_decode_t: Optional[float] = None
 
     def _done(self, r: Request) -> bool:
         if not r.generated:
@@ -57,21 +83,55 @@ class Scheduler:
             return True
         return len(r.generated) >= r.max_new
 
-    def _admit(self, r: Request, slot: int) -> None:
+    # -- admission ---------------------------------------------------------
+    def _total_len(self, r: Request) -> int:
+        patches = int(np.shape(r.extras["patches"])[0]) \
+            if "patches" in r.extras else 0
+        return patches + len(np.asarray(r.prompt)) + r.max_new
+
+    def _pages_needed(self, r: Request) -> int:
+        return -(-self._total_len(r) // self.engine.page_size)
+
+    def _validate(self, r: Request) -> None:
         if r.max_new < 1:
             # the prefill itself emits the first greedy token, so a budget
             # below one token is unservable rather than silently exceeded
             raise ValueError(f"request {r.rid}: max_new must be >= 1")
-        prompt = np.asarray(r.prompt, np.int32)
-        # VLM patch embeddings occupy cache positions ahead of the prompt
-        patches = int(np.shape(r.extras["patches"])[0]) \
-            if "patches" in r.extras else 0
-        if patches + len(prompt) + r.max_new > self.engine.max_len:
+        total = self._total_len(r)
+        if total > self.engine.max_len:
             raise ValueError(
-                f"request {r.rid}: patches {patches} + prompt {len(prompt)} "
-                f"+ max_new {r.max_new} exceeds engine max_len "
-                f"{self.engine.max_len} (the cache ring would wrap and "
-                f"overwrite live context)")
+                f"request {r.rid}: patches + prompt + max_new = {total} "
+                f"exceeds engine max_len {self.engine.max_len} (the cache "
+                f"would wrap and overwrite live context)")
+        if self.engine.paged and self._pages_needed(r) > self.engine.num_pages:
+            raise ValueError(
+                f"request {r.rid}: needs {self._pages_needed(r)} pages but "
+                f"the pool only has {self.engine.num_pages}")
+
+    def _alloc_pages(self, r: Request, slot: int) -> None:
+        pages = [self._free_pages.popleft()
+                 for _ in range(self._pages_needed(r))]
+        self._slot_pages[slot] = pages
+        self.state = self.engine.assign_pages(self.state, slot, pages)
+
+    def _evict(self, slot: int, free: deque) -> None:
+        free.append(slot)
+        if self.engine.paged:
+            self._free_pages.extend(self._slot_pages.pop(slot))
+            # clear the slot's page row: the freed pages may be reassigned
+            # immediately, and a stale row would let any later unmasked
+            # write through this slot land in the new owner's pages
+            self.state = self.engine.release_pages(self.state, slot)
+
+    def _chunkable(self, r: Request, chunk: int) -> bool:
+        # VLM prompts prefill whole: the image patches and prompt tokens
+        # embed as one stream, and patches dominate the prefix anyway
+        return chunk > 0 and "patches" not in r.extras \
+            and len(np.asarray(r.prompt)) > chunk
+
+    def _admit(self, r: Request, slot: int) -> None:
+        """Whole-prompt prefill-insert of ``r`` into ``slot``."""
+        prompt = np.asarray(r.prompt, np.int32)
         inputs = {"tokens": prompt[None, :]}
         for k, v in r.extras.items():
             inputs[k] = np.asarray(v)[None]
@@ -85,31 +145,106 @@ class Scheduler:
         r.slot = slot
         self.slot_history[slot].append(r.rid)
 
+    def _prefill_one_chunk(self, adm: _Admission) -> bool:
+        """Insert the next chunk of ``adm``; True once the prompt is done."""
+        r = adm.r
+        prompt = np.asarray(r.prompt, np.int32)
+        c = min(self.engine.prefill_chunk, len(prompt) - adm.cursor)
+        toks = prompt[None, adm.cursor:adm.cursor + c]
+        t0 = time.perf_counter()
+        self.state, tok = self.engine.insert_chunk(
+            self.state, {"tokens": toks}, adm.slot, adm.cursor)
+        first = int(np.asarray(tok)[0])     # sync point ends the timing
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        self.stats["prefill_tokens"] += c
+        self.stats["prefill_chunks"] += 1
+        adm.cursor += c
+        if adm.cursor < len(prompt):
+            return False
+        r.generated.append(first)           # final chunk's greedy token
+        r.slot = adm.slot
+        self.slot_history[adm.slot].append(r.rid)
+        return True
+
+    # -- the serving loop --------------------------------------------------
     def run(self, requests: Sequence[Request]) -> Dict[int, List[int]]:
         """Serve ``requests`` to completion; returns {rid: generated}."""
+        for r in requests:
+            # fail fast on the whole queue (host-side and cheap): an
+            # unservable request deep in the queue must not discard the
+            # tokens already generated for the requests ahead of it
+            self._validate(r)
         pending = deque(requests)
         active: Dict[int, Request] = {}
+        admissions: deque[_Admission] = deque()
         free = deque(range(self.engine.slots))
-        while pending or active:
+        chunk = self.engine.prefill_chunk if self.engine.paged else 0
+        while pending or active or admissions:
+            progressed = False
+            # admit pending requests into free slots (claiming pages first
+            # in paged mode — a short free list defers admission until an
+            # eviction returns pages)
             while pending and free:
+                r = pending[0]
+                if self.engine.paged and \
+                        len(self._free_pages) < self._pages_needed(r):
+                    break
+                pending.popleft()
                 slot = free.popleft()
-                r = pending.popleft()
-                self._admit(r, slot)
-                if self._done(r):           # EOS straight out of prefill
-                    free.append(slot)
+                if self.engine.paged:
+                    self._alloc_pages(r, slot)
+                if self._chunkable(r, chunk):
+                    admissions.append(_Admission(r, slot))
+                    progressed = True
                 else:
-                    active[slot] = r
-            if not active:
-                continue
-            t0 = time.perf_counter()
-            self.state, toks = self.engine.decode(self.state)
-            toks = np.asarray(toks)         # sync point ends the timing
-            self.stats["decode_s"] += time.perf_counter() - t0
-            self.stats["decode_steps"] += 1
-            self.stats["decode_tokens"] += len(active)
-            for slot, r in list(active.items()):
-                r.generated.append(int(toks[slot]))
-                if self._done(r):
-                    del active[slot]
-                    free.append(slot)
+                    self._admit(r, slot)
+                    progressed = True
+                    if self._done(r):       # EOS straight out of prefill
+                        self._evict(slot, free)
+                    else:
+                        active[slot] = r
+            # one prefill chunk of the admission at the head of the queue,
+            # then fall through to the all-slot decode: long-prompt
+            # admission interleaves with in-flight decodes
+            if admissions:
+                adm = admissions[0]
+                progressed = True
+                if self._prefill_one_chunk(adm):
+                    admissions.popleft()
+                    if self._done(adm.r):
+                        self._evict(adm.slot, free)
+                    else:
+                        active[adm.slot] = adm.r
+            if active:
+                progressed = True
+                mask = None
+                if self.engine.paged:
+                    mask = np.zeros((self.engine.slots,), bool)
+                    mask[list(active)] = True
+                t0 = time.perf_counter()
+                self.state, toks = self.engine.decode(self.state,
+                                                      active=mask)
+                toks = np.asarray(toks)     # sync point ends the timing
+                now = time.perf_counter()
+                self.stats["decode_s"] += now - t0
+                self.stats["decode_steps"] += 1
+                self.stats["decode_tokens"] += len(active)
+                if self._last_decode_t is not None:
+                    self.stats["max_decode_gap_s"] = max(
+                        self.stats["max_decode_gap_s"],
+                        now - self._last_decode_t)
+                self._last_decode_t = now
+                for slot, r in list(active.items()):
+                    r.generated.append(int(toks[slot]))
+                    if self._done(r):
+                        del active[slot]
+                        self._evict(slot, free)
+                if not active:
+                    self._last_decode_t = None
+            if not progressed:
+                # nothing in flight can ever free the pages the head
+                # request needs — admission would spin forever
+                raise RuntimeError(
+                    "admission deadlock: pending requests but no free "
+                    "slot/pages and nothing in flight to evict")
         return {r.rid: list(r.generated) for r in requests}

@@ -13,6 +13,14 @@ The leading axis of every cache leaf is the REQUEST SLOT axis (logical
 ``batch`` -> the data/pod mesh axes): continuous batching allocates a
 slot per admitted request and evicts it on EOS, so slots are recycled
 in place with a scatter — the state never changes shape.
+
+PAGED mode replaces the slot-major KV rings with a pool of fixed-size
+pages plus a per-slot ``page_table`` (S, pages_per_slot): slot count is
+decoupled from cache length, KV memory scales with live tokens instead
+of ``slots * max_len``, and long prompts can be inserted chunk by chunk
+into a slot's pages between fused decode steps.  Recurrent/SSM state
+stays slot-major (it is O(1) per slot).  The contiguous layout remains
+the parity baseline the serve tests pin paged mode against.
 """
 from __future__ import annotations
 
@@ -28,9 +36,10 @@ from repro.models import transformer as tfm
 
 class InferenceState(NamedTuple):
     params: Any
-    cache: Any            # tfm.init_cache pytree, slot-major leading axis
+    cache: Any            # tfm.init_cache / init_paged_cache pytree
     positions: jax.Array  # (S,) int32: next write index per slot
     last_tok: jax.Array   # (S,) int32: last accepted/emitted token per slot
+    page_table: Any = None  # paged mode: (S, pages_per_slot) int32, -1 free
 
 
 def inference_state_axes(cfg: ModelConfig) -> InferenceState:
@@ -57,6 +66,51 @@ def new_inference_state(params: Any, cfg: ModelConfig, *, slots: int,
         positions=jnp.zeros((slots,), jnp.int32),
         last_tok=jnp.zeros((slots,), jnp.int32),
     )
+
+
+def paged_inference_state_axes(cfg: ModelConfig) -> InferenceState:
+    """Logical-axes tree for the paged layout: KV pools take the "pages" /
+    "cache_seq" rules (the latter keeps the ``cache_needs_seq_shard``
+    branch), the page table rides the slot ("batch") axis."""
+    return InferenceState(
+        params=tfm.param_specs(cfg),
+        cache=tfm.paged_cache_axes(cfg),
+        positions=("batch",),
+        last_tok=("batch",),
+        page_table=("batch", None),
+    )
+
+
+def new_paged_inference_state(params: Any, cfg: ModelConfig, *, slots: int,
+                              num_pages: int, pages_per_slot: int,
+                              page_size: int,
+                              dtype=jnp.bfloat16) -> InferenceState:
+    """Fresh paged state: empty page pool, all page-table entries free."""
+    return InferenceState(
+        params=params,
+        cache=tfm.init_paged_cache(cfg, slots, num_pages, page_size,
+                                   dtype=dtype),
+        positions=jnp.zeros((slots,), jnp.int32),
+        last_tok=jnp.zeros((slots,), jnp.int32),
+        page_table=jnp.full((slots, pages_per_slot), -1, jnp.int32),
+    )
+
+
+def clear_pages(axes_tree: Any, cache: Any, pages: jax.Array,
+                num_pages: int) -> Any:
+    """Reset the position metadata of ``pages`` in every layer pool so a
+    page recycled from an evicted request can never leak stale entries
+    into its new owner's attention mask (positions are the only validity
+    record — k/v bytes are inert once pos is -1)."""
+    safe = jnp.where(pages >= 0, pages, num_pages)
+
+    def _one(ax, leaf):
+        if ax[-2:] != ("pages", "cache_seq"):
+            return leaf
+        i = ax.index("pages")
+        idx = (slice(None),) * i + (safe,)
+        return leaf.at[idx].set(-1, mode="drop")
+    return jax.tree.map(_one, axes_tree, cache, is_leaf=is_axes)
 
 
 def scatter_slot(axes_tree: Any, full: Any, one: Any, slot) -> Any:

@@ -56,10 +56,11 @@ def _requests(cfg, lens, gen=GEN, seed=0):
     return reqs
 
 
-def _serve(cfg, reqs, *, slots, eos=None, mesh=None, max_len=None):
+def _serve(cfg, reqs, *, slots, eos=None, mesh=None, max_len=None, **kw):
     eng = InferenceEngine(cfg, slots=slots, mesh=mesh, dtype=jnp.float32,
                           max_len=max_len or (PROMPT + GEN
-                                              + (cfg.num_patches or 0)))
+                                              + (cfg.num_patches or 0)),
+                          **kw)
     state = eng.init_state(T.init(cfg, jax.random.key(0)))
     sched = Scheduler(eng, state, eos_id=eos)
     return sched.run(reqs), sched
@@ -139,6 +140,145 @@ def test_eos_eviction_reuses_slot():
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache + chunked prefill: the contiguous slot-major layout is the
+# parity baseline — greedy tokens must be identical through the page pool,
+# whole-prompt or chunk by chunk, under slot reuse and co-batched decode
+# ---------------------------------------------------------------------------
+def test_paged_whole_prompt_matches_contiguous():
+    cfg = smoke_variant(get_config("olmo-1b"))
+    lens = [8, 5, 7, 6]
+    ref, _ = _serve(cfg, _requests(cfg, lens), slots=2)
+    got, _ = _serve(cfg, _requests(cfg, lens), slots=2, paged=True,
+                    page_size=4)
+    assert got == ref
+
+
+@pytest.mark.parametrize("arch", ["recurrentgemma-2b", "mamba2-130m"])
+def test_chunked_prefill_matches_contiguous_recurrent(arch):
+    """Chunked prefill replays recurrent/SSM state chunk by chunk from the
+    slot's row (reset on reuse) — tokens must match the whole-prompt path,
+    including the ragged remainder chunk."""
+    cfg = _ample_moe(smoke_variant(get_config(arch)))
+    lens = [8, 5, 7, 6]                     # 8 = 2 full chunks + remainder 2
+    ref, _ = _serve(cfg, _requests(cfg, lens), slots=2)
+    got, sched = _serve(cfg, _requests(cfg, lens), slots=2, paged=True,
+                        page_size=4, prefill_chunk=3)
+    assert got == ref
+    assert sched.stats["prefill_chunks"] >= 2 * len(lens)
+
+
+def test_paged_pool_decouples_slots_from_max_len():
+    """A pool sized to live tokens (num_pages << slots * pages_per_slot)
+    serves a generously provisioned engine with identical tokens and a
+    fraction of the KV memory."""
+    cfg = smoke_variant(get_config("olmo-1b"))
+    lens = [8, 5, 7, 6]
+    ref, ref_sched = _serve(cfg, _requests(cfg, lens), slots=2, max_len=48)
+    live_pages = 2 * (-(-(PROMPT + GEN) // 4))          # 2 slots * ceil(12/4)
+    got, sched = _serve(cfg, _requests(cfg, lens), slots=2, max_len=48,
+                        paged=True, page_size=4, num_pages=live_pages)
+    assert got == ref
+    bytes_of = lambda s: sum(x.nbytes for x in jax.tree.leaves(s.state.cache))
+    assert bytes_of(sched) < bytes_of(ref_sched) / 2, \
+        (bytes_of(sched), bytes_of(ref_sched))
+
+
+def test_page_exhaustion_defers_admission():
+    """With pages for only one request at a time, the second request waits
+    for the first eviction instead of corrupting the pool; an unservable
+    request fails loudly."""
+    cfg = smoke_variant(get_config("olmo-1b"))
+    lens = [8, 7, 6]
+    ref, _ = _serve(cfg, _requests(cfg, lens), slots=2)
+    pages_one = -(-(PROMPT + GEN) // 4)                 # exactly one request
+    got, sched = _serve(cfg, _requests(cfg, lens), slots=2, paged=True,
+                        page_size=4, num_pages=pages_one)
+    assert got == ref
+    assert sched.stats["decode_steps"] >= 3 * (GEN - 1)  # served serially
+    with pytest.raises(ValueError, match="pages"):
+        _serve(cfg, _requests(cfg, [PROMPT]), slots=1, paged=True,
+               page_size=4, num_pages=1)
+
+
+def test_chunked_admission_does_not_perturb_inflight_streams():
+    """The adversarial arrival the admission queue exists for: a long
+    prompt is chunk-prefilled into a freed slot WHILE a victim request
+    decodes — every stream must match the contiguous whole-prompt run."""
+    cfg = smoke_variant(get_config("olmo-1b"))
+    rng = np.random.default_rng(3)
+    mk = lambda rid, n, g: Request(
+        rid=rid, max_new=g,
+        prompt=rng.integers(0, cfg.vocab_size, n).astype(np.int32))
+    queue = lambda: [mk(0, 4, 10),          # victim: decodes throughout
+                     mk(1, 4, 2),           # frees its slot quickly
+                     mk(2, 16, 3)]          # long prompt, admitted mid-stream
+    rng = np.random.default_rng(3)
+    ref, _ = _serve(cfg, queue(), slots=2, max_len=32)
+    rng = np.random.default_rng(3)
+    got, sched = _serve(cfg, queue(), slots=2, max_len=32, paged=True,
+                        page_size=4, prefill_chunk=4)
+    assert got == ref
+    assert sched.stats["prefill_chunks"] >= 4   # the long prompt chunked
+    # the victim stream (1 prefill + 9 decode tokens) ran to completion
+    # fused with the other slots — its decodes bracket the admission
+    assert sched.stats["decode_steps"] >= 9
+
+
+# ---------------------------------------------------------------------------
+# Scheduler under adversarial arrival patterns
+# ---------------------------------------------------------------------------
+def test_admit_while_full_queues_and_reuses_slots():
+    """More pending requests than slots: admission waits for evictions,
+    every slot is reused, no slot serves two requests at once, and each
+    stream matches its ample-slots run."""
+    cfg = smoke_variant(get_config("olmo-1b"))
+    lens = [8, 5, 7, 6, 8, 5]
+    ref, _ = _serve(cfg, _requests(cfg, lens), slots=6)
+    got, sched = _serve(cfg, _requests(cfg, lens), slots=2)
+    assert got == ref
+    served = sorted(r for h in sched.slot_history.values() for r in h)
+    assert served == list(range(len(lens)))            # each rid exactly once
+    assert all(len(h) >= 2 for h in sched.slot_history.values())
+
+
+def test_eos_on_same_step_as_budget_eviction():
+    """A request whose EOS lands exactly on its max_new-th token is evicted
+    ONCE (EOS and budget agree), the stream is not truncated early, and the
+    freed slot still serves the waiting request."""
+    cfg = smoke_variant(get_config("olmo-1b"))
+    lens = [8, 7, 6]
+    probe, _ = _serve(cfg, _requests(cfg, lens), slots=2)
+    eos = probe[0][GEN - 1]                 # request 0's FINAL budget token
+    # avoid accidental early EOS in other streams making the test vacuous
+    assume_clean = all(eos not in p[:GEN - 1] for p in probe.values())
+    out, sched = _serve(cfg, _requests(cfg, lens), slots=2, eos=eos)
+    assert len(out[0]) == GEN and out[0] == probe[0]
+    if assume_clean:
+        for rid in (1, 2):
+            assert out[rid] == probe[rid], rid
+    served = sorted(r for h in sched.slot_history.values() for r in h)
+    assert served == [0, 1, 2]              # single admission per request
+    assert 2 in sum(sched.slot_history.values(), [])   # pending req 2 served
+
+
+def test_zero_length_generation_rejected():
+    """max_new=0 can't be served (prefill itself emits one token): the
+    scheduler must refuse loudly, for whole-prompt and chunked admission
+    alike, before serving ANY of the queue — even when the bad request
+    sits behind valid ones whose tokens would otherwise be discarded."""
+    cfg = smoke_variant(get_config("olmo-1b"))
+    reqs = _requests(cfg, [PROMPT, PROMPT])
+    reqs[1].max_new = 0                     # behind a valid request
+    with pytest.raises(ValueError, match="max_new"):
+        _serve(cfg, reqs, slots=1)
+    assert reqs[0].generated == []          # nothing served then thrown away
+    reqs = _requests(cfg, [PROMPT])
+    reqs[0].max_new = 0
+    with pytest.raises(ValueError, match="max_new"):
+        _serve(cfg, reqs, slots=1, paged=True, page_size=4, prefill_chunk=4)
+
+
+# ---------------------------------------------------------------------------
 # Rule-table shardings of the InferenceState on a real multi-device mesh
 # ---------------------------------------------------------------------------
 needs8 = pytest.mark.skipif(len(jax.devices()) < 8,
@@ -193,6 +333,52 @@ def test_mesh_serving_matches_single_device_tokens():
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     got, _ = _serve(cfg, _requests(cfg, lens), slots=4, mesh=mesh)
     assert got == ref
+
+
+@needs8
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "gemma2-2b",
+                                  "recurrentgemma-2b"])
+def test_paged_vs_contiguous_parity_on_mesh(arch):
+    """The PR's acceptance bar: on an 8-device (4, 2) mesh, the paged
+    engine with chunked prefill produces greedy tokens identical to the
+    contiguous slot-major baseline, across attention-only, local/global
+    and recurrent-hybrid architectures."""
+    cfg = smoke_variant(get_config(arch))
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    lens = [8, 5, 7, 6]
+    ref, _ = _serve(cfg, _requests(cfg, lens), slots=4, mesh=mesh)
+    got, _ = _serve(cfg, _requests(cfg, lens), slots=4, mesh=mesh,
+                    paged=True, page_size=4, prefill_chunk=3)
+    assert got == ref, arch
+
+
+@needs8
+def test_paged_pool_shardings_match_rule_tables():
+    """The page pool lands where the rule tables say on a (4, 2) mesh:
+    pages over "data" and — per cache_needs_seq_shard — the model axis on
+    kv_heads (heads mode) vs the within-page offset axis (ffn mode).  The
+    page table rides the slot axis like the position counters."""
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    for ffn_mode in (False, True):
+        cfg = smoke_variant(get_config("olmo-1b"))
+        if ffn_mode:
+            cfg = cfg.replace(tp_mode="ffn")
+        assert cache_needs_seq_shard(cfg, mesh) == ffn_mode
+        eng = InferenceEngine(cfg, mesh=mesh, slots=4, max_len=16,
+                              dtype=jnp.float32, paged=True, page_size=4,
+                              num_pages=8)
+        state = eng.init_state(T.init(cfg, jax.random.key(0)))
+        kv = state.cache["blocks"][str(cfg.layer_pattern.index("global"))] \
+            if "blocks" in state.cache else state.cache["prefix"][0]
+        spec = kv.k.sharding.spec                      # (rep, P, ps, Hkv, D)
+        assert spec[1] == "data", spec
+        if ffn_mode:
+            assert spec[2] == "model", spec
+        else:
+            assert spec[3] == "model", spec
+        assert kv.pos.sharding.spec[1] == "data", kv.pos.sharding.spec
+        assert state.page_table.sharding.spec[0] == "data"
+        assert state.positions.sharding.spec[0] == "data"
 
 
 # ---------------------------------------------------------------------------
