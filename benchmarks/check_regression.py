@@ -34,7 +34,10 @@ import sys
 from typing import Optional
 
 RATIO_KEYS = ("speedup",)
-RATIO_SUFFIXES = ("_ratio",)
+# _speedup: named speedups (ngram_speedup, ...); _per_step: accepted tokens
+# per fused decode step (speculative decoding) — dimensionless and workload-
+# determined like the other ratios, so they gate at the wide tolerance
+RATIO_SUFFIXES = ("_ratio", "_speedup", "_per_step")
 THROUGHPUT_SUFFIXES = ("_per_s",)
 
 

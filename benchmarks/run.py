@@ -100,6 +100,14 @@ def bench_serve() -> None:
                  1e6 / max(r["forecasts_per_s"], 1e-9),
                  f"forecasts_per_s={r['forecasts_per_s']};"
                  f"horizon={r['horizon_days']}d")
+    for r in res.get("spec_rows", []):
+        emit("serve_speculative",
+             1e6 / max(r["model_tok_per_s"], 1e-9),
+             f"baseline={r['baseline_tok_per_s']}tok/s;"
+             f"ngram={r['ngram_tok_per_s']}tok/s"
+             f"@{r['ngram_accepted_per_step']}tok/step;"
+             f"model={r['model_tok_per_s']}tok/s"
+             f"@{r['model_accepted_per_step']}tok/step")
 
 
 def bench_roofline() -> None:

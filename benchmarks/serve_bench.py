@@ -15,7 +15,17 @@ Rows recorded to ``BENCH_PR3.json``:
     whole-prompt prefill vs chunked prefill (``stats["max_decode_gap_s"]``);
   * ``serve_domst_forecast``        — the Dom-ST rollout workload.
 
-    python -m benchmarks.serve_bench [--smoke] [--out BENCH_PR3.json]
+The SPECULATIVE row is recorded to ``BENCH_PR5.json`` (its own baseline
+file so the PR-5 gate evolves independently):
+
+  * ``serve_speculative`` — a repetitive-prompt queue served at
+    ``spec_k=0`` (baseline) and with both drafters: tokens/sec, accepted
+    tokens per fused decode step (the losslessness means every number
+    describes the SAME output streams), for the checkpoint-free ngram
+    drafter and a self-draft model drafter (acceptance upper bound).
+
+    python -m benchmarks.serve_bench [--smoke] [--out BENCH_PR3.json] \
+        [--spec-out BENCH_PR5.json]
 
 ``--smoke`` shrinks sizes for CI; the numbers are honest either way (on a
 shared-core CPU container the batching win is modest — the bench exists
@@ -186,6 +196,82 @@ def bench_admission(*, arch: str, long_prompt: int, chunk: int,
             "stall_ratio": round(whole / max(chunked, 1e-9), 3)}
 
 
+def bench_speculative(*, arch: str, slots: int, requests: int,
+                      prompt_len: int, gen: int, spec_k: int,
+                      page_size: int, motif: int = 4) -> dict:
+    """Speculative decoding vs the fused one-token baseline.
+
+    The queue is REPETITIVE — each prompt tiles a short random motif —
+    because that is the workload speculation exists for: the ngram
+    drafter proposes the motif's continuation from the prompt itself,
+    and greedy decode output (which the context accumulates) gives it
+    recurring n-grams to mine as generation proceeds.  The model-drafter
+    leg self-drafts with the target's own params: its acceptance is the
+    mechanical upper bound, so ``model_accepted_per_step`` close to
+    ``spec_k + 1`` certifies the verify/rollback path, while the ngram
+    leg shows what a checkpoint-free drafter earns on this traffic.
+    All three legs emit bit-identical streams (asserted)."""
+    from repro.configs import get_config, smoke_variant
+    from repro.models import transformer as tfm
+    from repro.serve import (
+        InferenceEngine, ModelDrafter, NgramDrafter, Request, Scheduler,
+    )
+
+    cfg = smoke_variant(get_config(arch))
+    max_len = prompt_len + gen
+    rng = np.random.default_rng(0)
+    motifs = [rng.integers(0, cfg.vocab_size, motif).astype(np.int32)
+              for _ in range(requests)]
+
+    def queue():
+        return [Request(rid=i, max_new=gen,
+                        prompt=np.tile(motifs[i],
+                                       -(-prompt_len // motif))[:prompt_len])
+                for i in range(requests)]
+
+    def run(spec_k_, drafter):
+        engine = InferenceEngine(cfg, slots=slots, max_len=max_len,
+                                 paged=True, page_size=page_size)
+        state = engine.init_state(tfm.init(cfg, jax.random.key(0)))
+        sched = Scheduler(engine, state, spec_k=spec_k_, drafter=drafter)
+        sched.run(queue())                          # compile warmup
+        best = {"tok_per_s": 0.0, "accepted_per_step": 0.0}
+        out = None
+        for _ in range(2):                          # best-of-2 (CPU noise)
+            sched = Scheduler(engine, sched.state, spec_k=spec_k_,
+                              drafter=drafter)
+            t0 = time.perf_counter()
+            out = sched.run(queue())
+            wall = time.perf_counter() - t0
+            st = sched.stats
+            best["tok_per_s"] = max(best["tok_per_s"],
+                                    requests * gen / wall)
+            best["accepted_per_step"] = max(
+                best["accepted_per_step"],
+                st["decode_tokens"] / max(st["decode_slot_steps"], 1))
+        return best, out
+
+    base, ref = run(0, None)
+    ngram, out_n = run(spec_k, NgramDrafter())
+    model_drafter = ModelDrafter(
+        cfg, params=tfm.init(cfg, jax.random.key(0)), slots=slots,
+        max_len=max_len + spec_k, page_size=page_size)
+    model, out_m = run(spec_k, model_drafter)
+    assert out_n == ref and out_m == ref, "speculation changed the streams"
+    return {"path": "serve_speculative", "arch": cfg.name, "slots": slots,
+            "requests": requests, "prompt_len": prompt_len, "gen": gen,
+            "spec_k": spec_k, "page_size": page_size,
+            "baseline_tok_per_s": round(base["tok_per_s"], 1),
+            "ngram_tok_per_s": round(ngram["tok_per_s"], 1),
+            "model_tok_per_s": round(model["tok_per_s"], 1),
+            "ngram_accepted_per_step": round(ngram["accepted_per_step"], 3),
+            "model_accepted_per_step": round(model["accepted_per_step"], 3),
+            "ngram_speedup": round(
+                ngram["tok_per_s"] / max(base["tok_per_s"], 1e-9), 3),
+            "model_speedup": round(
+                model["tok_per_s"] / max(base["tok_per_s"], 1e-9), 3)}
+
+
 def bench_forecast(*, watersheds: int, days: int) -> dict:
     from repro.configs import get_config
     from repro.core import domst
@@ -220,6 +306,9 @@ def run(*, smoke: bool = False) -> dict:
         rows.append(bench_admission(arch="qwen2-1.5b", long_prompt=512,
                                     chunk=32, gen=24))
         rows.append(bench_forecast(watersheds=2, days=120))
+        spec_rows = [bench_speculative(arch="qwen2-1.5b", slots=4,
+                                       requests=8, prompt_len=16, gen=24,
+                                       spec_k=3, page_size=8)]
     else:
         rows = bench_lm(arch="qwen2-1.5b", slots=8, requests=32,
                         prompt_len=32, gen=24)
@@ -228,6 +317,9 @@ def run(*, smoke: bool = False) -> dict:
         rows.append(bench_admission(arch="qwen2-1.5b", long_prompt=1024,
                                     chunk=64, gen=48))
         rows.append(bench_forecast(watersheds=8, days=400))
+        spec_rows = [bench_speculative(arch="qwen2-1.5b", slots=8,
+                                       requests=16, prompt_len=32, gen=48,
+                                       spec_k=4, page_size=8)]
     mesh = make_host_mesh()
     return {"bench": "serve_prefill_decode_batching", "smoke": smoke,
             "backend": jax.default_backend(),
@@ -240,21 +332,31 @@ def run(*, smoke: bool = False) -> dict:
             "device_count": len(jax.devices()),
             "mesh_shape": {name: int(size) for name, size in
                            zip(mesh.axis_names, mesh.devices.shape)},
-            "rows": rows}
+            "rows": rows,
+            # written to the --spec-out file (BENCH_PR5.json) as their own
+            # baseline doc; kept separate so the two gates evolve freely
+            "spec_rows": spec_rows}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="small sizes for CI")
     ap.add_argument("--out", default="BENCH_PR3.json")
+    ap.add_argument("--spec-out", default="BENCH_PR5.json",
+                    help="speculative-decoding rows (their own baseline)")
     args = ap.parse_args()
     res = run(smoke=args.smoke)
-    for r in res["rows"]:
+    spec_rows = res.pop("spec_rows")
+    for r in res["rows"] + spec_rows:
         print(json.dumps(r), flush=True)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)
         f.write("\n")
-    print("wrote", args.out)
+    spec = dict(res, bench="serve_speculative", rows=spec_rows)
+    with open(args.spec_out, "w") as f:
+        json.dump(spec, f, indent=2)
+        f.write("\n")
+    print("wrote", args.out, "and", args.spec_out)
 
 
 if __name__ == "__main__":

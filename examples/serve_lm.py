@@ -1,7 +1,13 @@
 """Batched serving demo: continuous batching through the sharded inference
 engine on a reduced config of each decodable family (dense / MoE / SSM /
 hybrid / VLM) — ragged prompts, EOS-free budgeted generation, slot reuse,
-and the paged KV cache with chunked prefill (the serving default).
+the paged KV cache with chunked prefill (the serving default), and
+SPECULATIVE DECODING: `--spec-k 3 --drafter ngram` drafts three tokens per
+slot with checkpoint-free prompt lookup and verifies them in one fused
+paged forward.  Greedy serving is lossless under speculation, so the demo
+streams are bit-identical to a `spec_k = 0` run — acceptance only changes
+how many tokens each fused step yields (see `spec_accepted` /
+`accepted_tok_per_step` in the emitted JSON).
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -23,6 +29,10 @@ class Args:
     page_size = 8          # paged KV pool (0 = contiguous slot-major cache)
     num_pages = 0          # 0 = slots * ceil(max_len / page_size)
     prefill_chunk = 8      # admit prompts 8 tokens at a time between decodes
+    spec_k = 3             # draft-and-verify: up to 3 drafts per fused step
+    drafter = "ngram"      # prompt-lookup drafts ("model": second engine,
+    draft_config = ""      #   --draft-config names its smaller arch)
+    draft_ckpt = ""
     eos = -1
     ragged = True
     ckpt = ""

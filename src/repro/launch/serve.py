@@ -46,7 +46,10 @@ from repro.configs import get_config, smoke_variant
 from repro.core import domst
 from repro.data.pipeline import make_domst_windows, stacked_test_batch
 from repro.models import transformer as tfm
-from repro.serve import Forecaster, InferenceEngine, Request, Scheduler
+from repro.serve import (
+    Forecaster, InferenceEngine, ModelDrafter, NgramDrafter, Request,
+    Scheduler,
+)
 
 
 def make_requests(cfg, args) -> list:
@@ -67,6 +70,30 @@ def make_requests(cfg, args) -> list:
     return reqs
 
 
+def make_drafter(args, cfg, engine):
+    """The --drafter policy: checkpoint-free prompt lookup, or a second
+    smaller model whose own paged cache rides the target's mesh."""
+    if not engine.paged:
+        raise SystemExit("--spec-k > 0 requires the paged cache "
+                         "(--page-size > 0); --spec-k 0 on the contiguous "
+                         "layout is the parity baseline")
+    if args.drafter == "ngram":
+        return NgramDrafter()
+    draft_cfg = get_config(args.draft_config or args.arch)
+    if args.smoke:
+        draft_cfg = smoke_variant(draft_cfg)
+    if draft_cfg.vocab_size != cfg.vocab_size:
+        raise SystemExit(
+            f"draft model {draft_cfg.name} (vocab {draft_cfg.vocab_size}) "
+            f"must share the target vocab ({cfg.vocab_size})")
+    kw = dict(mesh=engine.mesh, slots=engine.slots,
+              max_len=engine.max_len + args.spec_k,
+              page_size=engine.page_size, seed=args.seed + 1)
+    if args.draft_ckpt:
+        return ModelDrafter.from_checkpoint(draft_cfg, args.draft_ckpt, **kw)
+    return ModelDrafter(draft_cfg, **kw)
+
+
 def serve_lm(args) -> dict:
     cfg = get_config(args.arch)
     if args.smoke:
@@ -84,8 +111,10 @@ def serve_lm(args) -> dict:
     if args.ckpt:
         params = engine.restore_params(args.ckpt, params)
     state = engine.init_state(params)
+    drafter = make_drafter(args, cfg, engine) if args.spec_k else None
     sched = Scheduler(engine, state,
-                      eos_id=args.eos if args.eos >= 0 else None)
+                      eos_id=args.eos if args.eos >= 0 else None,
+                      spec_k=args.spec_k, drafter=drafter)
     reqs = make_requests(cfg, args)
     t0 = time.perf_counter()
     generated = sched.run(reqs)
@@ -103,6 +132,15 @@ def serve_lm(args) -> dict:
            "num_pages": engine.num_pages,
            "prefill_chunk": engine.prefill_chunk,
            "prefill_chunks": st["prefill_chunks"],
+           "spec_k": args.spec_k,
+           "drafter": args.drafter if args.spec_k else None,
+           "spec_steps": st["spec_steps"],
+           "spec_proposed": st["spec_proposed"],
+           "spec_accepted": st["spec_accepted"],
+           # per SLOT-step: 1.0 means one token per fused step per slot
+           # (the non-speculative rate); >1 means accepted drafts
+           "accepted_tok_per_step": round(
+               st["decode_tokens"] / max(st["decode_slot_steps"], 1), 3),
            "device_count": len(jax.devices())}
     print(json.dumps(out))
     for r in reqs[:2]:
@@ -162,6 +200,20 @@ def main() -> None:
                     help="insert long prompts this many tokens at a time, "
                          "interleaved with decode steps (0 = whole-prompt "
                          "prefill; requires the paged cache)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: verify up to K drafted "
+                         "tokens per slot per fused step (0 = off, the "
+                         "parity baseline; requires the paged cache). "
+                         "Greedy outputs are bit-identical either way.")
+    ap.add_argument("--drafter", choices=("ngram", "model"), default="ngram",
+                    help="draft policy: host prompt-lookup (checkpoint-"
+                         "free) or a second smaller model (--draft-config)")
+    ap.add_argument("--draft-config", default="",
+                    help="arch name for --drafter model (default: --arch; "
+                         "must share the target vocab)")
+    ap.add_argument("--draft-ckpt", default="",
+                    help="TrainState .npz for the draft model's params "
+                         "(params subtree only, like --ckpt)")
     ap.add_argument("--eos", type=int, default=-1,
                     help="token id ending a request early (-1 = off)")
     ap.add_argument("--ragged", action="store_true",

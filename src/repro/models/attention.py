@@ -500,33 +500,59 @@ def paged_decode_attention(params, cfg: ModelConfig, x: jax.Array,
     return out, new_cache
 
 
+def paged_multitok_attention(params, cfg: ModelConfig, x: jax.Array,
+                             cache: PagedKVCache, page_rows: jax.Array,
+                             position: jax.Array, *,
+                             window: Optional[int] = None,
+                             active: Optional[jax.Array] = None):
+    """Multi-token paged attention for ALL slots at once: x (B,T,d) holds T
+    consecutive tokens per slot, row b starting at absolute ``position[b]``.
+    Every token's K/V is scattered into its slot's pages (inactive rows'
+    writes are dropped), then each query attends against its slot's whole
+    gathered cache — earlier context plus the preceding tokens of its own
+    run, with intra-run causality enforced by the shared position mask.
+
+    This is both the chunked-prefill path (B=1, a prompt chunk) and the
+    draft-verification path (one query per proposed token): a query at
+    position p never sees entries with pos > p, so cache entries written
+    by later-rejected draft tokens are invisible to every surviving query
+    and are overwritten before the real sequence reaches them.
+
+    Returns (out (B,T,d), new_cache)."""
+    B, T, _ = x.shape
+    pos = jnp.broadcast_to(
+        jnp.atleast_1d(jnp.asarray(position, jnp.int32)), (B,))
+    qpos = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]  # (B,T)
+    q, k_new, v_new = qkv_project(params, cfg, x, qpos)
+    P, ps = cache.k.shape[0], cache.k.shape[1]
+    rows = jnp.broadcast_to(page_rows[:, None, :],
+                            (B, T, page_rows.shape[-1]))
+    extra = None if active is None else active[:, None]
+    phys, off, ok = _page_coords(rows, qpos, ps, P, extra_ok=extra)
+    new_k = cache.k.at[phys, off].set(k_new.astype(cache.k.dtype),
+                                      mode="drop")
+    new_v = cache.v.at[phys, off].set(v_new.astype(cache.v.dtype),
+                                      mode="drop")
+    new_pos = cache.pos.at[phys, off].set(qpos, mode="drop")
+    new_cache = PagedKVCache(new_k, new_v, new_pos)
+    k_all, v_all, kp = gather_pages(new_cache, page_rows)
+    out = attend_cached(params, cfg, q, k_all, v_all, kp, qpos,
+                        window=window)
+    return out, new_cache
+
+
 def paged_prefill_attention(params, cfg: ModelConfig, x: jax.Array,
                             cache: PagedKVCache, page_row: jax.Array,
                             pos_start: jax.Array, *,
                             window: Optional[int] = None):
     """Chunked-prefill attention for ONE request slot.  x (1,C,d) is one
-    prompt chunk starting at absolute position ``pos_start``; the chunk's
-    K/V are written into the slot's pages, then the chunk queries attend
-    against the slot's whole gathered cache (earlier chunks + itself, with
-    intra-chunk causality enforced by the position mask).
+    prompt chunk starting at absolute position ``pos_start``; a batch-1
+    view of :func:`paged_multitok_attention`.
 
     Returns (out (1,C,d), new_cache)."""
-    B, C, _ = x.shape
-    qpos = pos_start + jnp.arange(C, dtype=jnp.int32)           # (C,)
-    q, k_new, v_new = qkv_project(params, cfg, x, qpos[None, :])
-    P, ps = cache.k.shape[0], cache.k.shape[1]
-    rows = jnp.broadcast_to(page_row, (C,) + page_row.shape)
-    phys, off, ok = _page_coords(rows, qpos, ps, P)
-    new_k = cache.k.at[phys, off].set(k_new[0].astype(cache.k.dtype),
-                                      mode="drop")
-    new_v = cache.v.at[phys, off].set(v_new[0].astype(cache.v.dtype),
-                                      mode="drop")
-    new_pos = cache.pos.at[phys, off].set(qpos, mode="drop")
-    new_cache = PagedKVCache(new_k, new_v, new_pos)
-    k_all, v_all, kp = gather_pages(new_cache, page_row[None])
-    out = attend_cached(params, cfg, q, k_all, v_all, kp, qpos[None, :],
-                        window=window)
-    return out, new_cache
+    return paged_multitok_attention(
+        params, cfg, x, cache, page_row[None],
+        jnp.reshape(jnp.asarray(pos_start, jnp.int32), (1,)), window=window)
 
 
 # ---------------------------------------------------------------------------

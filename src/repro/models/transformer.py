@@ -536,6 +536,69 @@ def decode_step_paged(params, cfg: ModelConfig, inputs: Dict[str, jax.Array],
     return logits, new_caches
 
 
+def _verify_recurrent(step_fn, lp, cfg: ModelConfig, x: jax.Array, entry):
+    """Run a one-token recurrent/SSM step over the T proposed tokens for
+    ALL slots at once, collecting the state after EVERY step: the verify
+    boundary rolls a slot back to the state at its last accepted token by
+    selecting from the stacked snapshots (``serve.state.select_verified``),
+    so a rejected draft can never leave a residue in the recurrence.
+    Returns (out (S,T,d), stacked states with a leading step axis)."""
+    def body(carry, xt):                    # xt (S, d) — one proposed token
+        out_t, ns = step_fn(lp, cfg, xt[:, None, :], carry)
+        return ns, (out_t[:, 0], ns)
+
+    _, (outs, stacked) = jax.lax.scan(body, entry, x.swapaxes(0, 1))
+    return outs.swapaxes(0, 1), stacked
+
+
+def verify_step_paged(params, cfg: ModelConfig, inputs: Dict[str, jax.Array],
+                      caches, position: jax.Array, page_table: jax.Array,
+                      active: jax.Array, *, dtype=jnp.bfloat16):
+    """Draft-verification forward: one fused chunk-style step over ALL
+    request slots.  ``inputs["tokens"]`` (S, T) holds, per slot, the last
+    accepted token followed by T-1 drafted tokens, starting at the slot's
+    ``position``; the step returns logits at EVERY proposed position (the
+    greedy acceptance rule runs on them outside this function).
+
+    Cache semantics differ from ``decode_step_paged`` in exactly the two
+    places speculation needs:
+
+      * attention layers write all T tokens' K/V into the slot's pages
+        (``paged_multitok_attention``) — rejected positions need no undo,
+        because the positional mask hides any entry with pos greater than
+        a later query's position until the real sequence overwrites it;
+      * recurrent/SSM layers return their state stacked per step (leading
+        T axis) instead of the final state, so the caller can select the
+        snapshot at each slot's last accepted token.
+
+    ``active`` (S,) bool gates the page writes; inactive slots' recurrent
+    rows are restored at selection time.  Returns (logits (S, T, V),
+    caches-with-stacked-recurrent-leaves)."""
+    x = embed_inputs(params, cfg, inputs, dtype)
+    if cfg.contribution_gate:
+        x = contribution_gate(params["gate"], x)
+
+    def layer_fn(lp, kind, ffn, ce, xx):
+        def mixer(lp_, kind_, h):
+            if kind_ in (ATTN_GLOBAL, ATTN_LOCAL):
+                window = cfg.window if kind_ == ATTN_LOCAL else None
+                return attn_mod.paged_multitok_attention(
+                    lp_["attn"], cfg, h, ce, page_table, position,
+                    window=window, active=active)
+            if kind_ == RECURRENT:
+                return _verify_recurrent(rglru_mod.rglru_decode_step,
+                                         lp_["rec"], cfg, h, ce)
+            if kind_ == SSM:
+                return _verify_recurrent(ssm_mod.ssm_decode_step,
+                                         lp_["ssm"], cfg, h, ce)
+            raise ValueError(kind_)
+        return _apply_layer_step(lp, cfg, xx, kind, ffn, mixer)
+
+    x, new_caches = _decode_walk(params, cfg, x, caches, layer_fn)
+    logits = _finish_logits(params, cfg, x)                     # (S, T, V)
+    return logits, new_caches
+
+
 def _chunk_recurrent(step_fn, lp, cfg: ModelConfig, x: jax.Array, entry,
                      slot: jax.Array, pos_start: jax.Array):
     """Run a one-token recurrent/SSM step over a chunk for ONE slot: slice

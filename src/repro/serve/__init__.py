@@ -1,6 +1,9 @@
 from repro.serve.engine import InferenceEngine  # noqa: F401
 from repro.serve.forecast import Forecaster  # noqa: F401
-from repro.serve.scheduler import Request, Scheduler  # noqa: F401
+from repro.serve.scheduler import PagePool, Request, Scheduler  # noqa: F401
+from repro.serve.speculative import (  # noqa: F401
+    Drafter, ModelDrafter, NgramDrafter,
+)
 from repro.serve.state import (  # noqa: F401
     InferenceState, inference_state_axes, new_inference_state,
     new_paged_inference_state, paged_inference_state_axes,

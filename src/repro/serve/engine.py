@@ -48,6 +48,7 @@ from repro.models import transformer as tfm
 from repro.serve.state import (
     InferenceState, clear_pages, inference_state_axes, new_inference_state,
     new_paged_inference_state, paged_inference_state_axes, scatter_slot,
+    select_verified,
 )
 
 
@@ -263,6 +264,36 @@ class InferenceEngine:
             last_tok=jnp.where(active, tok, state.last_tok),
         ), tok
 
+    def _verify_fn(self, state: InferenceState, drafts: jax.Array,
+                   draft_len: jax.Array, active: jax.Array):
+        """One fused speculative step: feed each active slot its last token
+        plus ``drafts`` (S, K) proposed tokens, verify in ONE paged forward,
+        and accept the longest greedy-matching prefix.  Losslessness: the
+        emitted tokens are exactly the model's own greedy argmaxes (drafts
+        only decide how many of them one step yields), rejected KV writes
+        are shadowed by the positional mask, and recurrent/SSM state rolls
+        back to the per-step snapshot at the last accepted token."""
+        S, K = drafts.shape
+        toks = jnp.concatenate([state.last_tok[:, None], drafts], axis=1)
+        logits, stacked = tfm.verify_step_paged(
+            state.params, self.cfg, {"tokens": toks}, state.cache,
+            state.positions, state.page_table, active, dtype=self.dtype)
+        greedy = jnp.argmax(logits, -1).astype(jnp.int32)       # (S, K+1)
+        ar = jnp.arange(K, dtype=jnp.int32)[None, :]
+        match = (greedy[:, :-1] == drafts) & (ar < draft_len[:, None])
+        # accepted drafts = longest matching prefix; emitted = accepted + 1
+        # (the model's own next token after the last accepted position)
+        n = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+        consumed = jnp.where(active, n + 1, 0).astype(jnp.int32)
+        cache = select_verified(self._cache_axes, stacked, state.cache, n,
+                                active)
+        last = jnp.take_along_axis(greedy, n[:, None], axis=1)[:, 0]
+        return state._replace(
+            cache=cache,
+            positions=state.positions + consumed,
+            last_tok=jnp.where(active, last, state.last_tok),
+        ), greedy, consumed
+
     def _active_sharding(self):
         return NamedSharding(self.mesh, resolve_pspec(
             ("batch",), (self.slots,), self.mesh, self.rules))
@@ -275,7 +306,8 @@ class InferenceEngine:
         if jfn is None:
             fns = {"insert": self._insert_fn, "chunk": self._chunk_fn,
                    "decode": self._decode_fn,
-                   "decode_paged": self._decode_paged_fn}
+                   "decode_paged": self._decode_paged_fn,
+                   "verify": self._verify_fn}
             fn = fns[kind]
             donate = (0,) if self.donate else ()
             if not self._explicit:
@@ -288,10 +320,15 @@ class InferenceEngine:
                     in_sh = (st_sh, self._input_shardings(inputs), None, None)
                 elif kind == "decode":
                     in_sh = (st_sh,)
+                elif kind == "verify":
+                    in_sh = (st_sh, self._input_shardings(inputs)["drafts"],
+                             self._active_sharding(),
+                             self._active_sharding())
                 else:
                     in_sh = (st_sh, self._active_sharding())
-                jfn = jax.jit(fn, in_shardings=in_sh,
-                              out_shardings=(st_sh, None),
+                out_sh = (st_sh, None, None) if kind == "verify" \
+                    else (st_sh, None)
+                jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                               donate_argnums=donate)
             self._jit_cache[key] = jfn
         return jfn
@@ -326,6 +363,27 @@ class InferenceEngine:
         jfn = self._get_jit("chunk", state, inputs)
         return self._run(jfn, state, inputs, jnp.asarray(slot, jnp.int32),
                          jnp.asarray(pos_start, jnp.int32))
+
+    def verify(self, state: InferenceState, drafts, draft_len, active):
+        """One fused speculative decode step over ALL slots.  ``drafts``
+        (slots, K) int32 proposed tokens per slot (row ``s`` meaningful up
+        to ``draft_len[s]``; the rest is padding whose cache writes are
+        shadowed exactly like rejected drafts); ``active`` (slots,) bool as
+        in :meth:`decode`.  Returns (state, emitted (slots, K+1) greedy
+        tokens, consumed (slots,)): slot ``s`` emitted
+        ``emitted[s, :consumed[s]]`` — its own greedy continuation,
+        bit-identical to ``consumed[s]`` successive :meth:`decode` calls —
+        and advanced its position by ``consumed[s]``.  Jit-cached per K."""
+        if not self.paged:
+            raise ValueError("speculative verification writes draft KV "
+                             "through page tables; build the engine with "
+                             "paged=True (the --spec-k 0 contiguous path "
+                             "is the parity baseline)")
+        drafts = jnp.asarray(drafts, jnp.int32)
+        jfn = self._get_jit("verify", state, {"drafts": drafts})
+        return self._run(jfn, state, drafts,
+                         jnp.asarray(draft_len, jnp.int32),
+                         jnp.asarray(active, bool))
 
     def decode(self, state: InferenceState, active=None):
         """One decode step over ALL slots: each slot's last token advances

@@ -19,11 +19,25 @@ Paged engines add two policy layers:
     prompt's prefill.  ``stats["max_decode_gap_s"]`` records the worst
     stall in-flight decodes actually experienced.
 
+SPECULATIVE DECODING (``spec_k > 0``, paged engines): instead of one
+token per fused step, each active slot asks a :class:`~repro.serve.
+speculative.Drafter` for up to ``spec_k`` guessed next tokens and the
+engine checks every guess in ONE ``verify`` forward, accepting the
+longest greedy-matching prefix (plus the model's own next token).  The
+serve path is greedy end to end, so speculation is lossless — emitted
+streams are bit-identical to the ``spec_k == 0`` baseline; acceptance
+only changes how many tokens a step yields (``stats["spec_*"]``).
+
 Each slot's computation is independent of its neighbours (attention,
 recurrent state and MoE routing are all per-row), so a request's greedy
 output is a function of its prompt alone: deterministic under any
-arrival order, slot assignment, co-batched traffic, or prefill chunking
-— the property ``tests/test_serve.py`` pins.
+arrival order, slot assignment, co-batched traffic, prefill chunking,
+or speculation depth — the property ``tests/test_serve.py`` and
+``tests/test_serve_speculative.py`` pin.
+
+``stats`` counts ONE call to :meth:`Scheduler.run`: it resets when a run
+starts (a second batch is never polluted by the first's throughput or
+``max_decode_gap_s``); ``lifetime_stats`` accumulates across runs.
 """
 from __future__ import annotations
 
@@ -36,6 +50,61 @@ import numpy as np
 
 from repro.serve.engine import InferenceEngine
 from repro.serve.state import InferenceState
+
+
+class PagePool:
+    """Host-side free list of physical KV pages with conservation checking.
+
+    Every admission (``alloc``) and eviction (``free``) moves pages
+    between the free list and a per-slot ownership map, and every
+    operation re-checks the invariant the hypothesis property test in
+    ``tests/test_property.py`` drives: pages are never leaked, never
+    double-owned, and ``available() + pages_in_tables() == num_pages``
+    at all times.  Misuse fails loudly — ``alloc`` of an occupied slot
+    or beyond capacity raises, ``free`` of an unowned slot raises."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = int(num_pages)
+        self._free: deque = deque(range(self.num_pages))
+        self._owned: Dict[int, List[int]] = {}
+
+    def available(self) -> int:
+        return len(self._free)
+
+    def pages_in_tables(self) -> int:
+        return sum(len(p) for p in self._owned.values())
+
+    def owner_slots(self):
+        return set(self._owned)
+
+    def alloc(self, slot: int, n: int) -> List[int]:
+        if slot in self._owned:
+            raise ValueError(f"slot {slot} already owns pages "
+                             f"{self._owned[slot]} (double admission)")
+        if n < 1:
+            raise ValueError(f"slot {slot}: cannot allocate {n} pages")
+        if n > len(self._free):
+            raise ValueError(f"slot {slot}: wants {n} pages, only "
+                             f"{len(self._free)} free (defer admission)")
+        pages = [self._free.popleft() for _ in range(n)]
+        self._owned[slot] = pages
+        self._check()
+        return pages
+
+    def free(self, slot: int) -> List[int]:
+        if slot not in self._owned:
+            raise KeyError(f"slot {slot} owns no pages (double free?)")
+        pages = self._owned.pop(slot)
+        self._free.extend(pages)
+        self._check()
+        return pages
+
+    def _check(self) -> None:
+        seen = list(self._free) + [p for ps in self._owned.values()
+                                   for p in ps]
+        assert len(seen) == len(set(seen)) == self.num_pages, \
+            f"page conservation broken: {len(set(seen))} distinct of " \
+            f"{len(seen)} tracked vs {self.num_pages} total"
 
 
 @dataclass
@@ -60,21 +129,50 @@ class Scheduler:
     """Drives an :class:`InferenceEngine` over a queue of requests."""
 
     def __init__(self, engine: InferenceEngine, state: InferenceState, *,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None, spec_k: int = 0,
+                 drafter=None):
         self.engine = engine
         self.state = state
         self.eos_id = eos_id
+        self.spec_k = int(spec_k)
+        if self.spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        if self.spec_k and not engine.paged:
+            raise ValueError("speculative decoding runs over the paged KV "
+                             "pool; spec_k > 0 requires paged=True "
+                             "(spec_k=0 is the parity baseline)")
+        if self.spec_k and drafter is None:
+            from repro.serve.speculative import NgramDrafter
+            drafter = NgramDrafter()
+        self.drafter = drafter
         #: per-slot rid history — lets tests assert slots are actually reused
         self.slot_history: Dict[int, List[int]] = {
             s: [] for s in range(engine.slots)}
-        self.stats = {"prefill_tokens": 0, "prefill_s": 0.0,
-                      "prefill_chunks": 0,
-                      "decode_tokens": 0, "decode_s": 0.0, "decode_steps": 0,
-                      "max_decode_gap_s": 0.0}
-        self._free_pages = deque(range(engine.num_pages)) \
-            if engine.paged else None
-        self._slot_pages: Dict[int, list] = {}
+        self.stats = self._fresh_stats()
+        #: accumulated across every finished/aborted run() on this scheduler
+        self.lifetime_stats = self._fresh_stats()
+        self._pages = PagePool(engine.num_pages) if engine.paged else None
         self._last_decode_t: Optional[float] = None
+
+    @staticmethod
+    def _fresh_stats() -> Dict[str, float]:
+        return {"prefill_tokens": 0, "prefill_s": 0.0, "prefill_chunks": 0,
+                "decode_tokens": 0, "decode_s": 0.0, "decode_steps": 0,
+                # slot-steps: sum over fused rounds of |active slots| — the
+                # denominator for accepted-tokens-per-step (== decode_tokens
+                # without speculation; smaller when drafts are accepted)
+                "decode_slot_steps": 0,
+                "max_decode_gap_s": 0.0,
+                # speculative counters: proposed drafts, drafts accepted,
+                # verify rounds (a subset of decode_steps)
+                "spec_proposed": 0, "spec_accepted": 0, "spec_steps": 0}
+
+    def _fold_lifetime(self) -> None:
+        for k, v in self.stats.items():
+            if k == "max_decode_gap_s":     # a max, not a sum
+                self.lifetime_stats[k] = max(self.lifetime_stats[k], v)
+            else:
+                self.lifetime_stats[k] += v
 
     def _done(self, r: Request) -> bool:
         if not r.generated:
@@ -109,19 +207,19 @@ class Scheduler:
                 f"the pool only has {self.engine.num_pages}")
 
     def _alloc_pages(self, r: Request, slot: int) -> None:
-        pages = [self._free_pages.popleft()
-                 for _ in range(self._pages_needed(r))]
-        self._slot_pages[slot] = pages
+        pages = self._pages.alloc(slot, self._pages_needed(r))
         self.state = self.engine.assign_pages(self.state, slot, pages)
 
     def _evict(self, slot: int, free: deque) -> None:
         free.append(slot)
         if self.engine.paged:
-            self._free_pages.extend(self._slot_pages.pop(slot))
+            self._pages.free(slot)
             # clear the slot's page row: the freed pages may be reassigned
             # immediately, and a stale row would let any later unmasked
             # write through this slot land in the new owner's pages
             self.state = self.engine.release_pages(self.state, slot)
+        if self.drafter is not None:
+            self.drafter.release(slot)
 
     def _chunkable(self, r: Request, chunk: int) -> bool:
         # VLM prompts prefill whole: the image patches and prompt tokens
@@ -166,9 +264,57 @@ class Scheduler:
         self.slot_history[adm.slot].append(r.rid)
         return True
 
+    # -- speculation -------------------------------------------------------
+    def _spec_round(self, active: Dict[int, Request], mask: np.ndarray):
+        """One speculative decode round: draft for every active slot with
+        budget headroom, verify all drafts in one fused forward.  Returns
+        (emitted (slots, >=1) greedy tokens, consumed (slots,)); falls
+        back to the plain fused decode when nothing was drafted (so an
+        empty-handed drafter costs a (slots, K+1)-shaped forward nothing).
+        """
+        S, K = self.engine.slots, self.spec_k
+        drafts = np.zeros((S, K), np.int32)
+        dlen = np.zeros((S,), np.int32)
+        wants = {}
+        for slot, r in active.items():
+            # cap so consumed <= remaining budget: the verify step advances
+            # the slot by every accepted token, and acceptance beyond the
+            # budget could not be rolled back host-side
+            k_s = min(K, r.max_new - len(r.generated) - 1)
+            if k_s > 0:
+                wants[slot] = (np.concatenate(
+                    [np.asarray(r.prompt, np.int32),
+                     np.asarray(r.generated, np.int32)]), k_s)
+        proposals = self.drafter.propose(wants) if wants else {}
+        for slot, d in proposals.items():
+            d = np.asarray(d, np.int32).ravel()[:wants[slot][1]]
+            drafts[slot, :len(d)] = d
+            dlen[slot] = len(d)
+        self.stats["spec_proposed"] += int(dlen.sum())
+        if not dlen.any():
+            self.state, toks = self.engine.decode(self.state, active=mask)
+            return np.asarray(toks)[:, None], mask.astype(np.int32)
+        self.state, emitted, consumed = self.engine.verify(
+            self.state, drafts, dlen, mask)
+        emitted, consumed = np.asarray(emitted), np.asarray(consumed)
+        self.stats["spec_steps"] += 1
+        self.stats["spec_accepted"] += int(consumed[mask].sum() - mask.sum())
+        return emitted, consumed
+
     # -- the serving loop --------------------------------------------------
     def run(self, requests: Sequence[Request]) -> Dict[int, List[int]]:
-        """Serve ``requests`` to completion; returns {rid: generated}."""
+        """Serve ``requests`` to completion; returns {rid: generated}.
+
+        ``stats`` describes this run alone (reset here); totals across
+        runs accumulate in ``lifetime_stats``."""
+        self.stats = self._fresh_stats()
+        self._last_decode_t = None
+        try:
+            return self._run(requests)
+        finally:
+            self._fold_lifetime()
+
+    def _run(self, requests: Sequence[Request]) -> Dict[int, List[int]]:
         for r in requests:
             # fail fast on the whole queue (host-side and cheap): an
             # unservable request deep in the queue must not discard the
@@ -187,7 +333,7 @@ class Scheduler:
             while pending and free:
                 r = pending[0]
                 if self.engine.paged and \
-                        len(self._free_pages) < self._pages_needed(r):
+                        self._pages.available() < self._pages_needed(r):
                     break
                 pending.popleft()
                 slot = free.popleft()
@@ -222,20 +368,31 @@ class Scheduler:
                     mask = np.zeros((self.engine.slots,), bool)
                     mask[list(active)] = True
                 t0 = time.perf_counter()
-                self.state, toks = self.engine.decode(self.state,
-                                                      active=mask)
-                toks = np.asarray(toks)     # sync point ends the timing
-                now = time.perf_counter()
+                if self.spec_k:
+                    emitted, consumed = self._spec_round(active, mask)
+                else:
+                    self.state, toks = self.engine.decode(self.state,
+                                                          active=mask)
+                    emitted = np.asarray(toks)[:, None]
+                    consumed = np.ones((self.engine.slots,), np.int32)
+                now = time.perf_counter()   # emitted is host -> synced
                 self.stats["decode_s"] += now - t0
                 self.stats["decode_steps"] += 1
-                self.stats["decode_tokens"] += len(active)
+                self.stats["decode_slot_steps"] += len(active)
                 if self._last_decode_t is not None:
                     self.stats["max_decode_gap_s"] = max(
                         self.stats["max_decode_gap_s"],
                         now - self._last_decode_t)
                 self._last_decode_t = now
                 for slot, r in list(active.items()):
-                    r.generated.append(int(toks[slot]))
+                    # a spec round can emit several tokens; honor EOS as
+                    # soon as it lands (the slot's cache advanced past it,
+                    # but a finished request's slot is evicted anyway)
+                    for tok in emitted[slot, :consumed[slot]]:
+                        r.generated.append(int(tok))
+                        self.stats["decode_tokens"] += 1
+                        if self._done(r):
+                            break
                     if self._done(r):
                         del active[slot]
                         self._evict(slot, free)

@@ -1,0 +1,3 @@
+from repro.serve.speculative.drafter import (  # noqa: F401
+    Drafter, ModelDrafter, NgramDrafter,
+)

@@ -1,0 +1,219 @@
+"""Drafters: token proposers for speculative decoding over the paged pool.
+
+A drafter guesses the next K tokens of each active request; the target
+engine then checks all K guesses in ONE fused ``verify`` forward and
+accepts the longest greedy-matching prefix.  Because the serve path is
+greedy-argmax end to end, speculation is LOSSLESS — every emitted token
+is the target model's own argmax regardless of what the drafter proposes;
+proposals only decide how many of those argmaxes one decode step yields.
+A bad drafter therefore costs speed, never correctness.
+
+Two implementations behind one :class:`Drafter` protocol:
+
+  * :class:`NgramDrafter` — checkpoint-free prompt lookup on host: find
+    the most recent earlier occurrence of the context's trailing n-gram
+    and propose the tokens that followed it.  Works on any integer token
+    stream (LM vocabularies and Dom-ST-style discretized series alike)
+    and shines on self-repeating output — exactly what greedy decoding
+    produces on templated/structured traffic.
+  * :class:`ModelDrafter` — a second, smaller ``ModelConfig`` run through
+    its own paged :class:`InferenceEngine` on the same mesh and rule
+    tables.  Params arrive through the existing hand-off paths
+    (``restore_subtree`` via :meth:`ModelDrafter.from_checkpoint`, or a
+    live ``TrainState`` via :meth:`ModelDrafter.from_train_state`).
+
+ModelDrafter sync discipline (the subtle part): the drafter's committed
+state only ever consumes CONFIRMED tokens.  Each round it (1) teacher-
+forces the tokens confirmed since its last round through ``insert_chunk``
+— the committed catch-up, whose final logits yield the first proposal —
+then (2) rolls the remaining K-1 proposals autoregressively on a THROWAWAY
+copy of the state (the engine is built with ``donate=False``, so the
+committed pytree survives) which is discarded after the round.  Discarding
+the speculative copy IS the rollback: recurrent/SSM state never advances
+through a token the target later rejects, so no per-layer snapshot
+plumbing is needed on the draft side.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.serve.engine import InferenceEngine
+
+#: propose() input: slot -> (confirmed context tokens, max proposals)
+Wants = Dict[int, Tuple[np.ndarray, int]]
+
+
+@runtime_checkable
+class Drafter(Protocol):
+    """Host-side proposal policy driven by the scheduler each spec round."""
+
+    def propose(self, wants: Wants) -> Dict[int, np.ndarray]:
+        """For each slot, up to ``k`` proposed next tokens (possibly fewer,
+        possibly empty).  ``context`` is the request's confirmed stream:
+        prompt followed by every token emitted so far."""
+        ...
+
+    def release(self, slot: int) -> None:
+        """The request in ``slot`` finished; forget any per-slot state
+        before the scheduler recycles the slot."""
+        ...
+
+
+class NgramDrafter:
+    """Prompt-lookup drafter: propose the continuation of the most recent
+    earlier occurrence of the context's trailing n-gram.
+
+    Tries n-gram lengths from ``max_ngram`` down to ``min_ngram`` and
+    returns the first hit's following tokens.  The scan is bounded to the
+    trailing ``lookback`` tokens so per-step host work stays O(lookback)
+    however long a generation runs (losslessness does not depend on WHAT
+    is proposed, so bounding the search window is free).  Stateless across
+    slots, so :meth:`release` is a no-op."""
+
+    def __init__(self, max_ngram: int = 3, min_ngram: int = 1,
+                 lookback: int = 2048):
+        if not 1 <= min_ngram <= max_ngram:
+            raise ValueError(f"need 1 <= min_ngram <= max_ngram, got "
+                             f"({min_ngram}, {max_ngram})")
+        if lookback <= max_ngram:
+            raise ValueError(f"lookback {lookback} must exceed max_ngram")
+        self.max_ngram = max_ngram
+        self.min_ngram = min_ngram
+        self.lookback = lookback
+
+    def _lookup(self, ctx: np.ndarray, k: int) -> Optional[np.ndarray]:
+        L = len(ctx)
+        for m in range(self.max_ngram, self.min_ngram - 1, -1):
+            if L <= m:
+                continue
+            key = ctx[L - m:]
+            win = np.lib.stride_tricks.sliding_window_view(ctx, m)[:L - m]
+            hits = np.nonzero((win == key).all(axis=1))[0]
+            if not len(hits):
+                continue
+            j = int(hits[-1])           # most recent earlier occurrence
+            cont = ctx[j + m:j + m + k]
+            if len(cont):
+                return cont
+        return None
+
+    def propose(self, wants: Wants) -> Dict[int, np.ndarray]:
+        out = {}
+        for slot, (ctx, k) in wants.items():
+            ctx = np.asarray(ctx, np.int64)[-self.lookback:]
+            cont = self._lookup(ctx, k)
+            if cont is not None:
+                out[slot] = np.asarray(cont, np.int32)
+        return out
+
+    def release(self, slot: int) -> None:
+        pass
+
+
+class ModelDrafter:
+    """Draft-model proposer: a smaller config served by its own paged
+    engine, slot-aligned with the target scheduler's slots.
+
+    The draft engine fully provisions its page pool (one static page row
+    per slot, re-cleared on slot reuse through ``assign_pages``) and runs
+    UNDONATED so the committed state survives the throwaway speculative
+    decodes — see the module docstring for the sync discipline."""
+
+    def __init__(self, cfg: ModelConfig, params=None, *, mesh=None,
+                 slots: int = 4, max_len: int = 64, page_size: int = 16,
+                 catch_up_chunk: int = 16, dtype=None, seed: int = 0):
+        if cfg.num_patches:
+            raise ValueError(
+                f"{cfg.name}: ModelDrafter drives a token-only stream; "
+                f"image-prefixed requests need the NgramDrafter")
+        import jax.numpy as jnp
+        self.cfg = cfg
+        self.chunk = int(catch_up_chunk)
+        if self.chunk < 1:
+            raise ValueError("catch_up_chunk must be >= 1")
+        self.engine = InferenceEngine(
+            cfg, mesh=mesh, slots=slots, max_len=max_len,
+            dtype=dtype if dtype is not None else jnp.bfloat16,
+            paged=True, page_size=page_size, donate=False)
+        if params is None:
+            params = tfm.init(cfg, jax.random.key(seed))
+        self.state = self.engine.init_state(params)
+        self._pos: Dict[int, int] = {}  # slot -> committed tokens consumed
+
+    # -- hand-off constructors --------------------------------------------
+    @classmethod
+    def from_checkpoint(cls, cfg: ModelConfig, path: str,
+                        **kw) -> "ModelDrafter":
+        """Params subtree of a ``repro.launch.train`` TrainState .npz —
+        the same ``restore_subtree`` hand-off the target engine uses."""
+        d = cls(cfg, **kw)
+        params = d.engine.restore_params(path, d.state.params)
+        d.state = d.state._replace(params=params)
+        return d
+
+    @classmethod
+    def from_train_state(cls, train_engine, train_state,
+                         **kw) -> "ModelDrafter":
+        """Adopt a live trained ``TrainState.params`` in place (no host
+        gather), reusing the train engine's mesh like
+        ``InferenceEngine.from_train_state`` does."""
+        return cls(train_engine.cfg, train_state.params,
+                   mesh=train_engine.mesh, **kw)
+
+    # -- the drafting round ------------------------------------------------
+    def _assign(self, slot: int) -> None:
+        per = self.engine.pages_per_slot
+        self.state = self.engine.assign_pages(
+            self.state, slot, list(range(slot * per, (slot + 1) * per)))
+        self._pos[slot] = 0
+
+    def _catch_up(self, slot: int, ctx: np.ndarray) -> int:
+        """Teacher-force the confirmed tokens this slot's committed state
+        has not consumed yet (bounded chunks keep jit shapes few); the
+        final chunk's greedy argmax is the first proposal."""
+        start = self._pos.get(slot)
+        if start is None or start > len(ctx) - 1:
+            self._assign(slot)          # fresh request in a recycled slot
+            start = 0
+        tok = None
+        while start < len(ctx):
+            c = ctx[start:start + self.chunk]
+            self.state, tok = self.engine.insert_chunk(
+                self.state, {"tokens": np.asarray(c, np.int32)[None]},
+                slot, start)
+            start += len(c)
+        self._pos[slot] = len(ctx)
+        return int(np.asarray(tok)[0])
+
+    def propose(self, wants: Wants) -> Dict[int, np.ndarray]:
+        drafts = {}
+        for slot, (ctx, _k) in wants.items():
+            ctx = np.asarray(ctx, np.int32)
+            total = len(ctx) + 1        # +1: the proposal being drafted
+            if total > self.engine.max_len:
+                continue                # request outgrew the draft cache
+            drafts[slot] = [self._catch_up(slot, ctx)]
+        if not drafts:
+            return {}
+        kmax = max(k for s, (_c, k) in wants.items() if s in drafts)
+        mask = np.zeros((self.engine.slots,), bool)
+        mask[list(drafts)] = True
+        # speculative rollout on a throwaway state: committed state (and
+        # its recurrent rows) never sees an unconfirmed token
+        st = self.state
+        for i in range(1, kmax):
+            st, toks = self.engine.decode(st, active=mask)
+            toks = np.asarray(toks)
+            for slot in drafts:
+                if i < wants[slot][1]:
+                    drafts[slot].append(int(toks[slot]))
+        return {s: np.asarray(d[:wants[s][1]], np.int32)
+                for s, d in drafts.items()}
+
+    def release(self, slot: int) -> None:
+        self._pos.pop(slot, None)

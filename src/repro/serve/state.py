@@ -113,6 +113,29 @@ def clear_pages(axes_tree: Any, cache: Any, pages: jax.Array,
     return jax.tree.map(_one, axes_tree, cache, is_leaf=is_axes)
 
 
+def select_verified(axes_tree: Any, stacked: Any, old: Any, n: jax.Array,
+                    active: jax.Array) -> Any:
+    """Roll the cache back to each slot's last accepted token after a
+    speculative verify step.
+
+    ``stacked`` is the cache tree ``tfm.verify_step_paged`` returned:
+    attention page pools are final (rejected writes are shadowed by the
+    positional mask — nothing to undo), while recurrent/SSM leaves carry a
+    per-step snapshot axis inserted just before their slot ("batch") axis.
+    ``n`` (S,) is the number of accepted draft tokens per slot: snapshot
+    index ``n[s]`` is the state after consuming the last accepted token.
+    Inactive slots keep their rows from ``old`` untouched."""
+    def _one(ax, st, o):
+        if "batch" not in ax:
+            return st               # paged KV pool: positional shadowing
+        i = ax.index("batch")       # step axis sits at i, slots at i+1
+        idx = n.reshape((1,) * (i + 1) + (-1,) + (1,) * (st.ndim - i - 2))
+        sel = jnp.squeeze(jnp.take_along_axis(st, idx, axis=i), axis=i)
+        m = active.reshape((1,) * i + (-1,) + (1,) * (sel.ndim - i - 1))
+        return jnp.where(m, sel.astype(o.dtype), o)
+    return jax.tree.map(_one, axes_tree, stacked, old, is_leaf=is_axes)
+
+
 def scatter_slot(axes_tree: Any, full: Any, one: Any, slot) -> Any:
     """Write a single-request cache ``one`` (slot axis of size 1) into row
     ``slot`` of the slot-major cache ``full``.

@@ -97,3 +97,45 @@ def test_rglru_decay_in_unit_interval(seed):
     r = rng.uniform(0, 1)
     a = np.exp(-8.0 * np.log1p(np.exp(lam)) * r)
     assert 0.0 < a <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Serve-side page free list (PR 5): conservation under arbitrary sequences
+# ---------------------------------------------------------------------------
+@given(st.integers(1, 32), st.data())
+def test_page_pool_conservation(num_pages, data):
+    """Across arbitrary admit/evict/exhaustion sequences the scheduler's
+    page free list never leaks or double-frees a page: every page id is
+    tracked exactly once and ``available() + pages_in_tables() ==
+    num_pages`` holds after every operation.  Misuse fails loudly."""
+    from repro.serve.scheduler import PagePool
+
+    pool = PagePool(num_pages)
+    model = {}                          # slot -> page count (reference)
+    for _ in range(data.draw(st.integers(1, 60), label="ops")):
+        op = data.draw(st.sampled_from(["admit", "evict"]), label="op")
+        if op == "admit":
+            slot = data.draw(st.integers(0, 7), label="slot")
+            want = data.draw(st.integers(1, num_pages + 2), label="pages")
+            if slot in model or want > pool.available():
+                # occupied slot / pool exhaustion: loud refusal, no change
+                with pytest.raises(ValueError):
+                    pool.alloc(slot, want)
+            else:
+                pages = pool.alloc(slot, want)
+                assert len(pages) == len(set(pages)) == want
+                model[slot] = want
+        elif model:
+            slot = data.draw(st.sampled_from(sorted(model)), label="victim")
+            freed = pool.free(slot)
+            assert len(freed) == model.pop(slot)
+        else:
+            with pytest.raises(KeyError):   # double free / never admitted
+                pool.free(data.draw(st.integers(0, 7), label="ghost"))
+        assert pool.available() + pool.pages_in_tables() == num_pages
+        assert pool.pages_in_tables() == sum(model.values())
+        assert pool.owner_slots() == set(model)
+    # drain: every page returns to the free list exactly once
+    for slot in sorted(model):
+        pool.free(slot)
+    assert pool.available() == num_pages and pool.pages_in_tables() == 0

@@ -261,6 +261,38 @@ def test_eos_on_same_step_as_budget_eviction():
     assert 2 in sum(sched.slot_history.values(), [])   # pending req 2 served
 
 
+def test_scheduler_stats_reset_between_runs():
+    """A second batch through the SAME scheduler must report its own
+    throughput/stall numbers: per-run ``stats`` reset when run() starts
+    (the regression: decode_s / max_decode_gap_s accumulated forever, so
+    a second batch inherited the first's worst stall and token counts),
+    while ``lifetime_stats`` keeps the cross-run totals."""
+    cfg = smoke_variant(get_config("olmo-1b"))
+    eng = InferenceEngine(cfg, slots=2, dtype=jnp.float32,
+                          max_len=PROMPT + GEN, paged=True, page_size=4)
+    sched = Scheduler(eng, eng.init_state(T.init(cfg, jax.random.key(0))))
+    sched.run(_requests(cfg, [8, 5, 7, 6]))
+    first = dict(sched.stats)
+    assert first["decode_steps"] > 0
+    # poison the gap stat to prove the reset (a stall from batch 1 must
+    # never be reported as batch 2's)
+    sched.stats["max_decode_gap_s"] = 123.0
+    sched.run(_requests(cfg, [6, 6]))
+    second = dict(sched.stats)
+    assert second["decode_steps"] == GEN - 1        # one 2-slot batch
+    assert second["decode_tokens"] == 2 * (GEN - 1)
+    assert second["max_decode_gap_s"] < 123.0
+    life = sched.lifetime_stats
+    assert life["decode_steps"] == first["decode_steps"] + GEN - 1
+    assert life["decode_tokens"] == \
+        first["decode_tokens"] + second["decode_tokens"]
+    assert life["max_decode_gap_s"] == max(first["max_decode_gap_s"],
+                                           second["max_decode_gap_s"])
+    # the page free list survived both runs intact
+    assert sched._pages.available() == eng.num_pages
+    assert sched._pages.pages_in_tables() == 0
+
+
 def test_zero_length_generation_rejected():
     """max_new=0 can't be served (prefill itself emits one token): the
     scheduler must refuse loudly, for whole-prompt and chunked admission
