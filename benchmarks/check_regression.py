@@ -15,9 +15,11 @@ gate survives bench evolution:
     (``*_s``, ``*_mib``, counts, shapes) are skipped — they measure the
     machine and the config, not the code;
   * absolute ``*_per_s`` keys are only compared when the two files ran in
-    the same environment (``smoke`` flag and ``device_count`` match) and
-    the two rows ran the same workload (all shared config scalars equal);
-    ratio keys are always comparable;
+    the same environment (``smoke`` flag, ``device_count`` AND the
+    recorded ``mesh_shape`` match — a 1x1-mesh run is not comparable to
+    an 8-way-data run on the same host) and the two rows ran the same
+    workload (all shared config scalars equal); ratio keys are always
+    comparable;
   * a throughput key regresses when ``fresh < baseline * (1 - tolerance)``
     — the default 0.3 fails on a >30% drop.  Ratio keys are quotients of
     two wall-clock timings (noisier by construction), so they use the
@@ -72,7 +74,8 @@ def compare_files(base_path: str, fresh_path: str, tolerance: float,
     with open(fresh_path) as f:
         fresh = json.load(f)
     env_match = base.get("smoke") == fresh.get("smoke") \
-        and base.get("device_count") == fresh.get("device_count")
+        and base.get("device_count") == fresh.get("device_count") \
+        and base.get("mesh_shape") == fresh.get("mesh_shape")
     base_rows = {_row_key(r): r for r in base.get("rows", [])}
     regressions = []
     for row in fresh.get("rows", []):

@@ -47,6 +47,21 @@ import jax
 import numpy as np
 
 
+def _bench_mesh():
+    """The mesh every bench engine runs on: all visible devices on the
+    data axis.  The engines used to fall back to their default 1x1 host
+    mesh while the result doc claimed ``device_count`` devices, so the
+    regression gate compared across different effective meshes; building
+    one mesh here and threading it through every engine (drafters
+    included) makes the recorded ``mesh_shape`` the truth."""
+    return jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
+
+
+def _paged_attn_path() -> str:
+    from repro.kernels.common import use_paged_attn_kernel
+    return "fused" if use_paged_attn_kernel() else "lax"
+
+
 def _make_requests(cfg, n, prompt_len, gen, seed=0):
     from repro.serve import Request
     rng = np.random.default_rng(seed)
@@ -96,14 +111,15 @@ def _run_queue(cfg, params_key, *, slots, requests, prompt_len, gen,
 
 
 def bench_lm(*, arch: str, slots: int, requests: int, prompt_len: int,
-             gen: int) -> list:
+             gen: int, mesh=None) -> list:
     from repro.configs import get_config, smoke_variant
 
     cfg = smoke_variant(get_config(arch))
     rates, batched_s, _ = _run_queue(cfg, 0, slots=slots, requests=requests,
-                                     prompt_len=prompt_len, gen=gen)
+                                     prompt_len=prompt_len, gen=gen,
+                                     mesh=mesh)
     _, seq_s, _ = _run_queue(cfg, 0, slots=1, requests=requests,
-                             prompt_len=prompt_len, gen=gen)
+                             prompt_len=prompt_len, gen=gen, mesh=mesh)
     tokens = requests * gen
     return [
         {"path": "serve_prefill_vs_decode", "arch": cfg.name, "slots": slots,
@@ -119,7 +135,7 @@ def bench_lm(*, arch: str, slots: int, requests: int, prompt_len: int,
 
 
 def bench_paged(*, arch: str, slots: int, requests: int, prompt_len: int,
-                gen: int, page_size: int) -> dict:
+                gen: int, page_size: int, mesh=None) -> dict:
     """Same queue, contiguous vs paged cache.  ``max_len`` is provisioned
     4x beyond what the queue needs (a serving config sized for its worst
     case); the paged pool is sized to the tokens actually live, so the
@@ -131,17 +147,17 @@ def bench_paged(*, arch: str, slots: int, requests: int, prompt_len: int,
     live_pages = slots * (-(-(prompt_len + gen) // page_size))
     _, contig_s, cstate = _run_queue(
         cfg, 0, slots=slots, requests=requests, prompt_len=prompt_len,
-        gen=gen, max_len=max_len)
+        gen=gen, max_len=max_len, mesh=mesh)
     _, paged_s, pstate = _run_queue(
         cfg, 0, slots=slots, requests=requests, prompt_len=prompt_len,
         gen=gen, max_len=max_len, paged=True, page_size=page_size,
-        num_pages=live_pages)
+        num_pages=live_pages, mesh=mesh)
     tokens = requests * gen
     cb, pb = _cache_bytes(cstate), _cache_bytes(pstate)
     return {"path": "serve_paged_vs_contiguous", "arch": cfg.name,
             "slots": slots, "requests": requests, "prompt_len": prompt_len,
             "gen": gen, "max_len": max_len, "page_size": page_size,
-            "num_pages": live_pages,
+            "num_pages": live_pages, "paged_attn_path": _paged_attn_path(),
             "contiguous_tok_per_s": round(tokens / contig_s, 1),
             "paged_tok_per_s": round(tokens / paged_s, 1),
             "contiguous_cache_mib": round(cb / 2**20, 3),
@@ -150,7 +166,7 @@ def bench_paged(*, arch: str, slots: int, requests: int, prompt_len: int,
 
 
 def bench_admission(*, arch: str, long_prompt: int, chunk: int,
-                    gen: int) -> dict:
+                    gen: int, mesh=None) -> dict:
     """Worst decode stall while a long prompt is admitted mid-stream.
 
     A victim request streams tokens in one slot; a short request briefly
@@ -168,7 +184,7 @@ def bench_admission(*, arch: str, long_prompt: int, chunk: int,
 
     def run(prefill_chunk):
         engine = InferenceEngine(cfg, slots=2, max_len=max_len, paged=True,
-                                 page_size=chunk,
+                                 page_size=chunk, mesh=mesh,
                                  prefill_chunk=prefill_chunk)
         state = engine.init_state(tfm.init(cfg, jax.random.key(0)))
         rng = np.random.default_rng(0)
@@ -198,7 +214,7 @@ def bench_admission(*, arch: str, long_prompt: int, chunk: int,
 
 def bench_speculative(*, arch: str, slots: int, requests: int,
                       prompt_len: int, gen: int, spec_k: int,
-                      page_size: int, motif: int = 4) -> dict:
+                      page_size: int, motif: int = 4, mesh=None) -> dict:
     """Speculative decoding vs the fused one-token baseline.
 
     The queue is REPETITIVE — each prompt tiles a short random motif —
@@ -231,7 +247,7 @@ def bench_speculative(*, arch: str, slots: int, requests: int,
 
     def run(spec_k_, drafter):
         engine = InferenceEngine(cfg, slots=slots, max_len=max_len,
-                                 paged=True, page_size=page_size)
+                                 paged=True, page_size=page_size, mesh=mesh)
         state = engine.init_state(tfm.init(cfg, jax.random.key(0)))
         sched = Scheduler(engine, state, spec_k=spec_k_, drafter=drafter)
         sched.run(queue())                          # compile warmup
@@ -255,12 +271,13 @@ def bench_speculative(*, arch: str, slots: int, requests: int,
     ngram, out_n = run(spec_k, NgramDrafter())
     model_drafter = ModelDrafter(
         cfg, params=tfm.init(cfg, jax.random.key(0)), slots=slots,
-        max_len=max_len + spec_k, page_size=page_size)
+        max_len=max_len + spec_k, page_size=page_size, mesh=mesh)
     model, out_m = run(spec_k, model_drafter)
     assert out_n == ref and out_m == ref, "speculation changed the streams"
     return {"path": "serve_speculative", "arch": cfg.name, "slots": slots,
             "requests": requests, "prompt_len": prompt_len, "gen": gen,
             "spec_k": spec_k, "page_size": page_size,
+            "paged_attn_path": _paged_attn_path(),
             "baseline_tok_per_s": round(base["tok_per_s"], 1),
             "ngram_tok_per_s": round(ngram["tok_per_s"], 1),
             "model_tok_per_s": round(model["tok_per_s"], 1),
@@ -296,39 +313,39 @@ def bench_forecast(*, watersheds: int, days: int) -> dict:
 
 
 def run(*, smoke: bool = False) -> dict:
-    from repro.launch.mesh import make_host_mesh
-
+    mesh = _bench_mesh()
     if smoke:
         rows = bench_lm(arch="qwen2-1.5b", slots=4, requests=8,
-                        prompt_len=12, gen=8)
+                        prompt_len=12, gen=8, mesh=mesh)
         rows.append(bench_paged(arch="qwen2-1.5b", slots=4, requests=8,
-                                prompt_len=12, gen=8, page_size=4))
+                                prompt_len=12, gen=8, page_size=4,
+                                mesh=mesh))
         rows.append(bench_admission(arch="qwen2-1.5b", long_prompt=512,
-                                    chunk=32, gen=24))
+                                    chunk=32, gen=24, mesh=mesh))
         rows.append(bench_forecast(watersheds=2, days=120))
         spec_rows = [bench_speculative(arch="qwen2-1.5b", slots=4,
                                        requests=8, prompt_len=16, gen=24,
-                                       spec_k=3, page_size=8)]
+                                       spec_k=3, page_size=8, mesh=mesh)]
     else:
         rows = bench_lm(arch="qwen2-1.5b", slots=8, requests=32,
-                        prompt_len=32, gen=24)
+                        prompt_len=32, gen=24, mesh=mesh)
         rows.append(bench_paged(arch="qwen2-1.5b", slots=8, requests=32,
-                                prompt_len=32, gen=24, page_size=8))
+                                prompt_len=32, gen=24, page_size=8,
+                                mesh=mesh))
         rows.append(bench_admission(arch="qwen2-1.5b", long_prompt=1024,
-                                    chunk=64, gen=48))
+                                    chunk=64, gen=48, mesh=mesh))
         rows.append(bench_forecast(watersheds=8, days=400))
         spec_rows = [bench_speculative(arch="qwen2-1.5b", slots=8,
                                        requests=16, prompt_len=32, gen=48,
-                                       spec_k=4, page_size=8)]
-    mesh = make_host_mesh()
+                                       spec_k=4, page_size=8, mesh=mesh)]
     return {"bench": "serve_prefill_decode_batching", "smoke": smoke,
             "backend": jax.default_backend(),
             # device_count = host devices actually visible (CI forces 8 via
-            # XLA_FLAGS; the committed baseline once wrongly said 1) — it
-            # identifies the environment, and the regression gate skips
-            # absolute-throughput comparison when it differs.  mesh_shape
-            # is the engines' default host mesh (1x1 on CPU smoke runs —
-            # the mesh tests, not this bench, exercise the 8-way mesh).
+            # XLA_FLAGS) and mesh_shape = the mesh EVERY bench engine above
+            # actually ran on (_bench_mesh threads it through; a past bug
+            # recorded a degenerate 1x1 default here).  Both identify the
+            # environment: the regression gate skips absolute-throughput
+            # comparison when either differs.
             "device_count": len(jax.devices()),
             "mesh_shape": {name: int(size) for name, size in
                            zip(mesh.axis_names, mesh.devices.shape)},

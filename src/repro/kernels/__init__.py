@@ -7,8 +7,11 @@ Each kernel package has:
 
 Kernels: pixcon (fused contribution gating), conv1d (causal depthwise),
 lstm_cell (fused gates), ssd_chunk (Mamba-2 intra-chunk dual form),
-local_attn (sliding-window flash attention).
+local_attn (sliding-window flash attention), paged_attn (fused
+page-table lookup + gather + online-softmax attend for paged serving).
 
-On this CPU container kernels run with interpret=True; on TPU the same
-pallas_call lowers natively.
+Interpret-vs-native lowering and the paged-attention dispatch flag are
+decided lazily per trace by ``repro.kernels.common`` (use_interpret /
+use_paged_attn_kernel) — on this CPU container kernels run with
+interpret=True; on TPU the same pallas_call lowers natively.
 """

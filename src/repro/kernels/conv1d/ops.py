@@ -2,15 +2,12 @@
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import use_interpret
 from repro.kernels.conv1d.kernel import causal_conv1d_pallas
-
-INTERPRET = jax.default_backend() != "tpu" or \
-    os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
 
 # keep a block's (bt, S+K-1, ct) slice well under VMEM: 8*2048*128*4 ≈ 8 MB
 _MAX_SEQ_PER_CALL = 2048
@@ -24,7 +21,7 @@ def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array, *,
     K = w.shape[0]
     if S <= _MAX_SEQ_PER_CALL:
         return causal_conv1d_pallas(x, w, b, activation=activation,
-                                    interpret=INTERPRET)
+                                    interpret=use_interpret())
     # chunk over S, carrying the K-1 tail (same recurrence as decode)
     n = S // _MAX_SEQ_PER_CALL
     rem = S - n * _MAX_SEQ_PER_CALL
@@ -36,7 +33,7 @@ def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array, *,
         xc = jax.lax.dynamic_slice_in_dim(x, lo, hi - lo, axis=1)
         xc_ext = jnp.concatenate([tail, xc], axis=1)
         yc = causal_conv1d_pallas(xc_ext, w, b, activation=activation,
-                                  interpret=INTERPRET)[:, K - 1:]
+                                  interpret=use_interpret())[:, K - 1:]
         outs.append(yc)
         tail = xc[:, -(K - 1):] if K > 1 else tail
     return jnp.concatenate(outs, axis=1)

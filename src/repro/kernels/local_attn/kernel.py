@@ -1,7 +1,8 @@
 """Sliding-window flash attention Pallas kernel.
 
 Grid: (B, Hq, S/bq, W/bq + 1) — the innermost axis walks the KV blocks in
-a q-block's window; the output block index repeats across it, so the
+a q-block's window (both directions for causal=False, so 2*W/bq + 1
+steps); the output block index repeats across it, so the
 online-softmax state (m, l, acc) lives in VMEM scratch and the output is
 committed on the last window step.  FLOPs are O(S * (W + bq)) — the
 sub-quadratic path gemma2/recurrentgemma need at long context — and live
@@ -23,7 +24,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-            bq: int, nwin: int, window: int, causal: bool):
+            bq: int, nwin: int, back: int, window: int, causal: bool,
+            seq_len: int):
     i = pl.program_id(2)                 # q block
     j = pl.program_id(3)                 # window step
 
@@ -38,13 +40,18 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     v = v_ref[...][0, :, 0, :].astype(jnp.float32)
 
     D = q.shape[-1]
-    kb = i - (nwin - 1) + j                                     # true kv block
+    kb = i - back + j                                           # true kv block
     q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
     k_pos = kb * bq + jax.lax.broadcasted_iota(jnp.int32, (1, bq), 1)
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) / np.sqrt(D)
     delta = q_pos - k_pos
-    mask = (k_pos >= 0) & (delta < window)
+    # k_pos < seq_len: the ops wrapper pads S up to a q-block multiple, and
+    # the padded (zero) keys land INSIDE a tail query's window on the
+    # non-causal branch (ahead of the query, within `window`) — the causal
+    # branch happened to exclude them via delta >= 0, the non-causal branch
+    # attended to them.
+    mask = (k_pos >= 0) & (k_pos < seq_len) & (delta < window)
     if causal:
         mask = mask & (delta >= 0)
     else:
@@ -68,24 +75,37 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 
 def local_attention_pallas(q, k, v, *, window: int, causal: bool = True,
-                           block_q: int = 128, interpret: bool = True):
-    """q (B,S,Hq,D), k/v (B,S,Hkv,D) -> (B,S,Hq,D)."""
+                           block_q: int = 128, seq_len: int | None = None,
+                           interpret: bool = True):
+    """q (B,S,Hq,D), k/v (B,S,Hkv,D) -> (B,S,Hq,D).
+
+    ``seq_len`` is the true (pre-padding) sequence length; keys at or past
+    it are masked.  Defaults to S (no padding).
+    """
     B, S, Hq, D = q.shape
+    if seq_len is None:
+        seq_len = S
     Hkv = k.shape[2]
     G = Hq // Hkv
     bq = min(block_q, S)
     assert S % bq == 0, (S, bq)
     win_blocks = (window + bq - 1) // bq
-    nwin = win_blocks + 1
+    # Backward blocks cover q_pos - k_pos < window; the non-causal branch
+    # also attends FORWARD (k_pos - q_pos < window), so its walk extends
+    # the same number of blocks past the query block — the old walk
+    # stopped at block i and silently dropped forward keys in block i+1+.
+    back = win_blocks
+    fwd = 0 if causal else win_blocks
+    nwin = back + fwd + 1
     nqb = S // bq
     grid = (B, Hq, nqb, nwin)
 
     def k_idx(b, h, i, j):
-        kb = i - (nwin - 1) + j
-        return (b, jnp.maximum(kb, 0), h // G, 0)
+        kb = i - back + j
+        return (b, jnp.clip(kb, 0, nqb - 1), h // G, 0)
 
-    kern = functools.partial(_kernel, bq=bq, nwin=nwin, window=window,
-                             causal=causal)
+    kern = functools.partial(_kernel, bq=bq, nwin=nwin, back=back,
+                             window=window, causal=causal, seq_len=seq_len)
     return pl.pallas_call(
         kern,
         grid=grid,

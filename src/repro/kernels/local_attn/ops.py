@@ -2,15 +2,12 @@
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import use_interpret
 from repro.kernels.local_attn.kernel import local_attention_pallas
-
-INTERPRET = jax.default_backend() != "tpu" or \
-    os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
 
 
 @functools.partial(jax.jit, static_argnames=("window", "causal", "block_q"))
@@ -24,5 +21,6 @@ def local_attention_fused(q, k, v, *, window: int, causal: bool = True,
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
     out = local_attention_pallas(q, k, v, window=window, causal=causal,
-                                 block_q=bq, interpret=INTERPRET)
+                                 block_q=bq, seq_len=S,
+                                 interpret=use_interpret())
     return out[:, :S]

@@ -2,21 +2,17 @@
 (D, 4H) packed layout used by core/temporal.py)."""
 from __future__ import annotations
 
-import os
-
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import use_interpret
 from repro.kernels.lstm_cell.kernel import lstm_cell_pallas
-
-INTERPRET = jax.default_backend() != "tpu" or \
-    os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
 
 
 @jax.jit
 def lstm_cell_fused(x, h, c, wx, wh, b):
     """Fused LSTM cell.  wx (D,4,H), wh (H,4,H), b (4,H)."""
-    return lstm_cell_pallas(x, h, c, wx, wh, b, interpret=INTERPRET)
+    return lstm_cell_pallas(x, h, c, wx, wh, b, interpret=use_interpret())
 
 
 def pack_weights(wx_flat: jax.Array, wh_flat: jax.Array, b_flat: jax.Array):

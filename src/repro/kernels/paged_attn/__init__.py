@@ -1,0 +1,1 @@
+from repro.kernels.paged_attn.ops import paged_attention_fused  # noqa: F401

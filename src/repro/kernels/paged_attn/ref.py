@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the fused paged-attention kernel.
+
+Gathers the slot's pages exactly like ``models.attention.gather_pages``
+(unassigned page -> pos -1, k/v 0), runs a full masked softmax, and
+zeroes rows with no attendable entry — the kernel's l=0 semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, k_pool, v_pool, pos_pool, page_rows, qpos, *,
+                        window: int = 0, softcap: float = 0.0):
+    """q (B,T,Hkv,G,D); pools (P,ps,Hkv,D)/(P,ps); page_rows (B,n);
+    qpos (B,T) -> (B,T,Hkv,G,D)."""
+    B, T, Hkv, G, D = q.shape
+    P, ps = pos_pool.shape
+    n = page_rows.shape[1]
+    safe = jnp.where(page_rows >= 0, page_rows, P)
+    k = jnp.take(k_pool, safe, axis=0, mode="fill",
+                 fill_value=0).reshape(B, n * ps, Hkv, D)
+    v = jnp.take(v_pool, safe, axis=0, mode="fill",
+                 fill_value=0).reshape(B, n * ps, Hkv, D)
+    kp = jnp.take(pos_pool, safe, axis=0, mode="fill",
+                  fill_value=-1).reshape(B, n * ps)
+
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(D)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    kpb = kp[:, None, None, None, :]                            # (B,1,1,1,L)
+    pq = qpos[:, None, None, :, None]                           # (B,1,1,T,1)
+    mask = (kpb >= 0) & (kpb <= pq)
+    if window:
+        mask = mask & (pq - kpb < window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask, p, 0.0)                                 # all-masked row -> 0
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).astype(q.dtype)

@@ -2,16 +2,12 @@
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import use_interpret
 from repro.kernels.pixcon.kernel import pixcon_gate_pallas
-
-# interpret=True on CPU (this container); native lowering on TPU.
-INTERPRET = jax.default_backend() != "tpu" or \
-    os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
 
 
 @functools.partial(jax.jit, static_argnames=("temperature", "normalize"))
@@ -23,4 +19,4 @@ def pixcon_gate(x: jax.Array, feats: jax.Array, w1: jax.Array, b1: jax.Array,
     b2v = b2.reshape(1)
     return pixcon_gate_pallas(x, feats, w1, b1, w2v, b2v,
                               temperature=temperature, normalize=normalize,
-                              interpret=INTERPRET)
+                              interpret=use_interpret())

@@ -2,15 +2,11 @@
 tensors to the kernel's flattened (B*nc, H, ...) grid."""
 from __future__ import annotations
 
-import os
-
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import use_interpret
 from repro.kernels.ssd_chunk.kernel import ssd_chunk_pallas
-
-INTERPRET = jax.default_backend() != "tpu" or \
-    os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
 
 
 @jax.jit
@@ -23,7 +19,7 @@ def ssd_chunk_fused(Cc, Bc, xdt, dA_cs):
     y, st = ssd_chunk_pallas(
         to_k(Cc), to_k(Bc), to_k(xdt),
         dA_cs.reshape(Bsz * nc, H, Q),
-        interpret=INTERPRET)
+        interpret=use_interpret())
     y = y.reshape(Bsz, nc, H, Q, P).transpose(0, 1, 3, 2, 4)
     st = st.reshape(Bsz, nc, H, P, N)
     return y, st

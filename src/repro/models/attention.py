@@ -24,6 +24,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import ParamFactory, constrain
+from repro.kernels.common import use_paged_attn_kernel
+from repro.kernels.paged_attn.ops import paged_attention_fused
 from repro.models.layers import apply_norm, apply_rope, norm_params
 
 NEG_INF = -1e30
@@ -331,13 +333,13 @@ def fill_cache_from_prefill(cache: KVCache, k: jax.Array, v: jax.Array) -> KVCac
     return KVCache(new_k, new_v, new_pos)
 
 
-def attend_cached(params, cfg: ModelConfig, q: jax.Array, k_all: jax.Array,
+def attend_masked(cfg: ModelConfig, q: jax.Array, k_all: jax.Array,
                   v_all: jax.Array, kp: jax.Array, qpos: jax.Array, *,
                   window: Optional[int] = None) -> jax.Array:
-    """Masked attention of q (B,Sq,Hq,D) against gathered cache entries
-    k/v (B,L,Hkv,D) whose absolute positions are kp (B,L), -1 = empty.
-    qpos (B,Sq) holds the query positions (causality + window come from the
-    position metadata alone, so ring and paged layouts share this path)."""
+    """Projection-free core of :func:`attend_cached`: q (B,Sq,Hq,D)
+    against gathered cache entries k/v (B,L,Hkv,D) whose absolute
+    positions are kp (B,L), -1 = empty -> (B,Sq,Hq,D).  This is the lax
+    counterpart of ``kernels.paged_attn.paged_attention_fused``."""
     B, Sq, Hq, dh = q.shape
     Hkv = k_all.shape[2]
     G = Hq // Hkv
@@ -356,7 +358,17 @@ def attend_cached(params, cfg: ModelConfig, q: jax.Array, k_all: jax.Array,
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(q.dtype),
                    v_all.astype(q.dtype))
-    o = o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, dh)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, dh)
+
+
+def attend_cached(params, cfg: ModelConfig, q: jax.Array, k_all: jax.Array,
+                  v_all: jax.Array, kp: jax.Array, qpos: jax.Array, *,
+                  window: Optional[int] = None) -> jax.Array:
+    """Masked attention of q (B,Sq,Hq,D) against gathered cache entries
+    k/v (B,L,Hkv,D) whose absolute positions are kp (B,L), -1 = empty.
+    qpos (B,Sq) holds the query positions (causality + window come from the
+    position metadata alone, so ring and paged layouts share this path)."""
+    o = attend_masked(cfg, q, k_all, v_all, kp, qpos, window=window)
     return out_project(params, o)
 
 
@@ -454,6 +466,27 @@ def _page_coords(page_rows: jax.Array, logical: jax.Array, ps: int, P: int,
     return phys, logical % ps, ok
 
 
+def paged_attend(params, cfg: ModelConfig, q: jax.Array,
+                 cache: PagedKVCache, page_rows: jax.Array,
+                 qpos: jax.Array, *,
+                 window: Optional[int] = None) -> jax.Array:
+    """Attend q (B,T,Hq,D) against the page pool through slot page tables
+    page_rows (B,n) and project out.  Dispatches to the fused Pallas
+    kernel (``kernels.paged_attn``) when ``use_paged_attn_kernel()`` says
+    so — the TPU fast path, no gathered cache copy — and otherwise to the
+    lax fallback (``gather_pages`` + ``attend_masked``).  Both paths see
+    the same position metadata, so masking semantics are identical."""
+    if use_paged_attn_kernel():
+        o = paged_attention_fused(
+            q, cache.k, cache.v, cache.pos, page_rows, qpos,
+            window=int(window) if window else 0,
+            softcap=float(cfg.attn_softcap) if cfg.attn_softcap else 0.0)
+    else:
+        k_all, v_all, kp = gather_pages(cache, page_rows)
+        o = attend_masked(cfg, q, k_all, v_all, kp, qpos, window=window)
+    return out_project(params, o)
+
+
 def paged_fill_from_prefill(pool: PagedKVCache, ring: KVCache,
                             page_row: jax.Array) -> PagedKVCache:
     """Write a single-request contiguous prefill cache ``ring`` (batch 1,
@@ -494,9 +527,8 @@ def paged_decode_attention(params, cfg: ModelConfig, x: jax.Array,
                                       mode="drop")
     new_pos = cache.pos.at[phys, off].set(pos, mode="drop")
     new_cache = PagedKVCache(new_k, new_v, new_pos)
-    k_all, v_all, kp = gather_pages(new_cache, page_rows)
-    out = attend_cached(params, cfg, q, k_all, v_all, kp, pos[:, None],
-                        window=window)
+    out = paged_attend(params, cfg, q, new_cache, page_rows, pos[:, None],
+                       window=window)
     return out, new_cache
 
 
@@ -535,9 +567,8 @@ def paged_multitok_attention(params, cfg: ModelConfig, x: jax.Array,
                                       mode="drop")
     new_pos = cache.pos.at[phys, off].set(qpos, mode="drop")
     new_cache = PagedKVCache(new_k, new_v, new_pos)
-    k_all, v_all, kp = gather_pages(new_cache, page_rows)
-    out = attend_cached(params, cfg, q, k_all, v_all, kp, qpos,
-                        window=window)
+    out = paged_attend(params, cfg, q, new_cache, page_rows, qpos,
+                       window=window)
     return out, new_cache
 
 

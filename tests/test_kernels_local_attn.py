@@ -49,3 +49,13 @@ def test_unaligned_seq_padding(rng):
     got = local_attention_fused(q, k, v, window=8, block_q=16)
     want = local_attention_ref(q, k, v, window=8)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("S,bq", [(37, 16), (45, 8), (100, 64)])
+def test_unaligned_noncausal_padding(rng, S, bq):
+    """Non-causal + S % block_q != 0: padded keys sit AHEAD of the tail
+    queries, inside their window — they must be masked (regression)."""
+    q, k, v = _mk(rng, 2, S, 4, 2, 16, jnp.float32)
+    got = local_attention_fused(q, k, v, window=8, causal=False, block_q=bq)
+    want = local_attention_ref(q, k, v, window=8, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
