@@ -24,8 +24,20 @@ file so the PR-5 gate evolves independently):
     describes the SAME output streams), for the checkpoint-free ngram
     drafter and a self-draft model drafter (acceptance upper bound).
 
+The PREFIX-CACHE / PREEMPTION rows are recorded to ``BENCH_PR7.json``
+(again a separate baseline so the PR-7 gate evolves independently):
+
+  * ``serve_prefix_cache``     — a shared-system-prompt queue (75%% of
+    every prompt is a common prefix) served cold vs through the
+    refcounted radix cache: mean TTFT both ways, ``ttft_speedup``, and
+    the %% of prefill tokens skipped.  Streams asserted bit-identical;
+  * ``serve_preemption_burst`` — a burst queue against a page pool that
+    holds one resident request: admission-latency (TTFT) percentiles
+    with defer-only vs page-aware preemption, plus how many admissions
+    each policy deferred.  Streams asserted identical.
+
     python -m benchmarks.serve_bench [--smoke] [--out BENCH_PR3.json] \
-        [--spec-out BENCH_PR5.json]
+        [--spec-out BENCH_PR5.json] [--pr7-out BENCH_PR7.json]
 
 ``--smoke`` shrinks sizes for CI; the numbers are honest either way (on a
 shared-core CPU container the batching win is modest — the bench exists
@@ -289,6 +301,118 @@ def bench_speculative(*, arch: str, slots: int, requests: int,
                 model["tok_per_s"] / max(base["tok_per_s"], 1e-9), 3)}
 
 
+def bench_prefix_cache(*, arch: str, prompt_len: int, shared: int, gen: int,
+                       page_size: int, requests: int, chunk: int,
+                       mesh=None) -> dict:
+    """Shared-prefix workload (PR 7): every request's prompt opens with the
+    same ``shared`` tokens (a system prompt).  One persistent scheduler
+    serves the queue one request per run, so ``sched.ttft`` isolates each
+    request's time-to-first-token; the prefix-cache leg maps the shared
+    run by refcount bump and resumes prefill at the divergence point,
+    while the cold leg re-prefills everything.  Streams are asserted
+    bit-identical — the speedup buys latency, not different tokens."""
+    from repro.configs import get_config, smoke_variant
+    from repro.models import transformer as tfm
+    from repro.serve import InferenceEngine, Request, Scheduler
+
+    cfg = smoke_variant(get_config(arch))
+    max_len = prompt_len + gen
+    pre = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, shared).astype(np.int32)
+
+    def mk(rid):
+        tail = np.random.default_rng(100 + rid).integers(
+            0, cfg.vocab_size, prompt_len - shared).astype(np.int32)
+        return Request(rid=rid, max_new=gen,
+                       prompt=np.concatenate([pre, tail]))
+
+    def leg(prefix_cache):
+        engine = InferenceEngine(cfg, slots=1, max_len=max_len, paged=True,
+                                 page_size=page_size, prefill_chunk=chunk,
+                                 mesh=mesh)
+        state = engine.init_state(tfm.init(cfg, jax.random.key(0)))
+        sched = Scheduler(engine, state, prefix_cache=prefix_cache)
+        sched.run([mk(900)])            # compile warmup (cold path)
+        sched.run([mk(901)])            # warm path: hits when caching
+        ttfts, streams, hit_tokens = [], {}, 0
+        for rid in range(requests):
+            streams[rid] = sched.run([mk(rid)])[rid]
+            ttfts.append(sched.ttft[rid])
+            hit_tokens += sched.stats["prefix_hit_tokens"]
+        return float(np.mean(ttfts)), streams, hit_tokens
+
+    cold_ttft, cold_streams, _ = leg(False)
+    warm_ttft, warm_streams, hits = leg(True)
+    assert warm_streams == cold_streams, "prefix cache changed the streams"
+    return {"path": "serve_prefix_cache", "arch": cfg.name,
+            "requests": requests, "prompt_len": prompt_len,
+            "shared_prefix": shared, "gen": gen, "page_size": page_size,
+            "prefill_chunk": chunk, "paged_attn_path": _paged_attn_path(),
+            "cold_ttft_s": round(cold_ttft, 4),
+            "warm_ttft_s": round(warm_ttft, 4),
+            "ttft_speedup": round(cold_ttft / max(warm_ttft, 1e-9), 3),
+            "prefix_hit_tokens": hits,
+            "prefill_skipped_pct": round(
+                100.0 * hits / (requests * prompt_len), 1)}
+
+
+def bench_preemption(*, arch: str, prompt_len: int, gen: int,
+                     page_size: int, requests: int, mesh=None) -> dict:
+    """Burst workload (PR 7): a queue arrives at once against a page pool
+    that holds ONE resident request (plus one spare page), so admission
+    is contended.  The defer leg waits for evictions; the preempt leg
+    swaps the youngest active slot's pages to host and admits the
+    newcomer immediately.  ``sched.ttft`` percentiles show what each
+    policy does to admission latency; streams are asserted identical."""
+    from repro.configs import get_config, smoke_variant
+    from repro.models import transformer as tfm
+    from repro.serve import InferenceEngine, Request, Scheduler
+
+    cfg = smoke_variant(get_config(arch))
+    max_len = prompt_len + gen
+    pages_per_req = -(-max_len // page_size)
+    num_pages = pages_per_req + 1
+
+    def queue():
+        return [Request(rid=i, max_new=gen,
+                        prompt=np.random.default_rng(7 + i).integers(
+                            0, cfg.vocab_size, prompt_len).astype(np.int32))
+                for i in range(requests)]
+
+    def leg(preempt):
+        engine = InferenceEngine(cfg, slots=2, max_len=max_len, paged=True,
+                                 page_size=page_size, num_pages=num_pages,
+                                 mesh=mesh)
+        state = engine.init_state(tfm.init(cfg, jax.random.key(0)))
+        sched = Scheduler(engine, state, preempt=preempt)
+        sched.run(queue())              # compile warmup
+        sched = Scheduler(engine, sched.state, preempt=preempt)
+        streams = sched.run(queue())
+        lat = sorted(sched.ttft.values())
+        return {"p50": float(np.percentile(lat, 50)),
+                "p99": float(np.percentile(lat, 99)),
+                "streams": streams, "stats": dict(sched.stats)}
+
+    base = leg(False)
+    pre = leg(True)
+    assert pre["streams"] == base["streams"], "preemption changed streams"
+    return {"path": "serve_preemption_burst", "arch": cfg.name, "slots": 2,
+            "requests": requests, "prompt_len": prompt_len, "gen": gen,
+            "page_size": page_size, "num_pages": num_pages,
+            "p50_ttft_no_preempt_s": round(base["p50"], 4),
+            "p99_ttft_no_preempt_s": round(base["p99"], 4),
+            "p50_ttft_preempt_s": round(pre["p50"], 4),
+            "p99_ttft_preempt_s": round(pre["p99"], 4),
+            "p99_ttft_speedup": round(
+                base["p99"] / max(pre["p99"], 1e-9), 3),
+            "preemptions": pre["stats"]["preemptions"],
+            "restores": pre["stats"]["restores"],
+            "deferred_no_preempt": base["stats"]["deferred_admissions"],
+            "deferred_preempt": pre["stats"]["deferred_admissions"],
+            "max_defer_cycles_no_preempt":
+                base["stats"]["max_defer_cycles"]}
+
+
 def bench_forecast(*, watersheds: int, days: int) -> dict:
     from repro.configs import get_config
     from repro.core import domst
@@ -326,6 +450,12 @@ def run(*, smoke: bool = False) -> dict:
         spec_rows = [bench_speculative(arch="qwen2-1.5b", slots=4,
                                        requests=8, prompt_len=16, gen=24,
                                        spec_k=3, page_size=8, mesh=mesh)]
+        prefix_rows = [
+            bench_prefix_cache(arch="qwen2-1.5b", prompt_len=64, shared=48,
+                               gen=8, page_size=8, requests=4, chunk=16,
+                               mesh=mesh),
+            bench_preemption(arch="qwen2-1.5b", prompt_len=16, gen=16,
+                             page_size=8, requests=4, mesh=mesh)]
     else:
         rows = bench_lm(arch="qwen2-1.5b", slots=8, requests=32,
                         prompt_len=32, gen=24, mesh=mesh)
@@ -338,6 +468,12 @@ def run(*, smoke: bool = False) -> dict:
         spec_rows = [bench_speculative(arch="qwen2-1.5b", slots=8,
                                        requests=16, prompt_len=32, gen=48,
                                        spec_k=4, page_size=8, mesh=mesh)]
+        prefix_rows = [
+            bench_prefix_cache(arch="qwen2-1.5b", prompt_len=128, shared=96,
+                               gen=16, page_size=8, requests=6, chunk=32,
+                               mesh=mesh),
+            bench_preemption(arch="qwen2-1.5b", prompt_len=32, gen=32,
+                             page_size=8, requests=4, mesh=mesh)]
     return {"bench": "serve_prefill_decode_batching", "smoke": smoke,
             "backend": jax.default_backend(),
             # device_count = host devices actually visible (CI forces 8 via
@@ -352,7 +488,10 @@ def run(*, smoke: bool = False) -> dict:
             "rows": rows,
             # written to the --spec-out file (BENCH_PR5.json) as their own
             # baseline doc; kept separate so the two gates evolve freely
-            "spec_rows": spec_rows}
+            "spec_rows": spec_rows,
+            # written to the --pr7-out file (BENCH_PR7.json): prefix-cache
+            # TTFT + preemption burst rows, again their own baseline doc
+            "prefix_rows": prefix_rows}
 
 
 def main() -> None:
@@ -361,10 +500,14 @@ def main() -> None:
     ap.add_argument("--out", default="BENCH_PR3.json")
     ap.add_argument("--spec-out", default="BENCH_PR5.json",
                     help="speculative-decoding rows (their own baseline)")
+    ap.add_argument("--pr7-out", default="BENCH_PR7.json",
+                    help="prefix-cache / preemption rows (their own "
+                         "baseline)")
     args = ap.parse_args()
     res = run(smoke=args.smoke)
     spec_rows = res.pop("spec_rows")
-    for r in res["rows"] + spec_rows:
+    prefix_rows = res.pop("prefix_rows")
+    for r in res["rows"] + spec_rows + prefix_rows:
         print(json.dumps(r), flush=True)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)
@@ -373,7 +516,11 @@ def main() -> None:
     with open(args.spec_out, "w") as f:
         json.dump(spec, f, indent=2)
         f.write("\n")
-    print("wrote", args.out, "and", args.spec_out)
+    pr7 = dict(res, bench="serve_prefix_preempt", rows=prefix_rows)
+    with open(args.pr7_out, "w") as f:
+        json.dump(pr7, f, indent=2)
+        f.write("\n")
+    print("wrote", args.out, ",", args.spec_out, "and", args.pr7_out)
 
 
 if __name__ == "__main__":

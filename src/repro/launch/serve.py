@@ -19,7 +19,13 @@ both running through ``repro/serve/``:
     per-slot page tables sizes KV memory to live tokens (``--num-pages``)
     instead of slots * max_len, and ``--prefill-chunk N`` admits long
     prompts N tokens at a time interleaved with decode steps so admission
-    never stalls in-flight requests.  The whole :class:`InferenceState`
+    never stalls in-flight requests.  ``--prefix-cache`` grows the pool
+    into a refcounted radix cache — requests sharing a prompt prefix
+    (``--shared-prefix``) prefill it once and later admissions map the
+    cached pages by refcount bump — and ``--preempt`` absorbs bursts by
+    swapping a victim slot's pages to host memory instead of deferring
+    admission; greedy streams stay bit-identical under both.  The whole
+    :class:`InferenceState`
     (params + cache pool + page tables + slot position counters) is
     sharded from the ``distributed/sharding.py`` rule tables, so the same
     script drives the production mesh (decode_32k / long_500k shapes)
@@ -53,8 +59,14 @@ from repro.serve import (
 
 
 def make_requests(cfg, args) -> list:
-    """Deterministic synthetic request queue (ragged lengths if asked)."""
+    """Deterministic synthetic request queue (ragged lengths if asked).
+
+    ``--shared-prefix N`` makes the first N tokens of every prompt
+    identical — the shared-system-prompt traffic shape the prefix cache
+    serves (per-request tails stay distinct and random)."""
     rng = np.random.default_rng(args.seed)
+    sp = max(0, min(getattr(args, "shared_prefix", 0), args.prompt_len - 1))
+    prefix = rng.integers(0, cfg.vocab_size, sp).astype(np.int32)
     reqs = []
     for i in range(args.requests):
         n = args.prompt_len
@@ -64,9 +76,11 @@ def make_requests(cfg, args) -> list:
         if cfg.family == "vlm":
             extras["patches"] = np.zeros(
                 (cfg.num_patches, cfg.frontend_dim), np.float32)
+        tail = rng.integers(0, cfg.vocab_size,
+                            max(1, n - sp)).astype(np.int32)
         reqs.append(Request(
             rid=i, max_new=args.gen, extras=extras,
-            prompt=rng.integers(0, cfg.vocab_size, n).astype(np.int32)))
+            prompt=np.concatenate([prefix, tail]) if sp else tail))
     return reqs
 
 
@@ -112,9 +126,13 @@ def serve_lm(args) -> dict:
         params = engine.restore_params(args.ckpt, params)
     state = engine.init_state(params)
     drafter = make_drafter(args, cfg, engine) if args.spec_k else None
+    if (args.prefix_cache or args.preempt) and not engine.paged:
+        raise SystemExit("--prefix-cache/--preempt are page-pool policies; "
+                         "they require the paged cache (--page-size > 0)")
     sched = Scheduler(engine, state,
                       eos_id=args.eos if args.eos >= 0 else None,
-                      spec_k=args.spec_k, drafter=drafter)
+                      spec_k=args.spec_k, drafter=drafter,
+                      prefix_cache=args.prefix_cache, preempt=args.preempt)
     reqs = make_requests(cfg, args)
     t0 = time.perf_counter()
     generated = sched.run(reqs)
@@ -141,6 +159,19 @@ def serve_lm(args) -> dict:
            # (the non-speculative rate); >1 means accepted drafts
            "accepted_tok_per_step": round(
                st["decode_tokens"] / max(st["decode_slot_steps"], 1), 3),
+           "prefix_cache": args.prefix_cache, "preempt": args.preempt,
+           "shared_prefix": args.shared_prefix,
+           "prefix_hits": st["prefix_hits"],
+           "prefix_hit_tokens": st["prefix_hit_tokens"],
+           # hit tokens over all prefill-bound tokens (inserted + skipped):
+           # the fraction of prompt prefill the cache absorbed
+           "prefix_hit_rate": round(
+               st["prefix_hit_tokens"] / max(
+                   st["prefix_hit_tokens"] + st["prefill_tokens"], 1), 3),
+           "cow_pages": st["cow_pages"],
+           "preemptions": st["preemptions"], "restores": st["restores"],
+           "deferred_admissions": st["deferred_admissions"],
+           "max_defer_cycles": st["max_defer_cycles"],
            "device_count": len(jax.devices())}
     print(json.dumps(out))
     for r in reqs[:2]:
@@ -214,6 +245,21 @@ def main() -> None:
     ap.add_argument("--draft-ckpt", default="",
                     help="TrainState .npz for the draft model's params "
                          "(params subtree only, like --ckpt)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="refcounted radix prefix cache over the page "
+                         "pool: admissions map cached shared-prefix pages "
+                         "by refcount bump and resume prefill at the "
+                         "divergence point (requires the paged cache). "
+                         "Greedy streams are bit-identical either way.")
+    ap.add_argument("--preempt", action="store_true",
+                    help="page-aware preemption: on page exhaustion swap "
+                         "the most recently admitted slot's pages to host "
+                         "and restore them when pages return, instead of "
+                         "deferring admission (requires the paged cache)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="make the first N prompt tokens identical across "
+                         "the queue (the shared-system-prompt workload "
+                         "the prefix cache serves)")
     ap.add_argument("--eos", type=int, default=-1,
                     help="token id ending a request early (-1 = off)")
     ap.add_argument("--ragged", action="store_true",

@@ -1,6 +1,8 @@
 from repro.serve.engine import InferenceEngine  # noqa: F401
 from repro.serve.forecast import Forecaster  # noqa: F401
-from repro.serve.scheduler import PagePool, Request, Scheduler  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    PagePool, RadixPagePool, Request, Scheduler,
+)
 from repro.serve.speculative import (  # noqa: F401
     Drafter, ModelDrafter, NgramDrafter,
 )

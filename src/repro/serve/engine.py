@@ -46,9 +46,10 @@ from repro.distributed.sharding import (
 )
 from repro.models import transformer as tfm
 from repro.serve.state import (
-    InferenceState, clear_pages, inference_state_axes, new_inference_state,
-    new_paged_inference_state, paged_inference_state_axes, scatter_slot,
-    select_verified,
+    InferenceState, clear_pages, copy_pool_pages, gather_page_rows,
+    gather_slot_rows, inference_state_axes, is_axes, new_inference_state,
+    new_paged_inference_state, paged_inference_state_axes,
+    scatter_page_rows, scatter_slot, scatter_slot_rows, select_verified,
 )
 
 
@@ -99,6 +100,7 @@ class InferenceEngine:
             self._cache_axes = tfm.cache_axes(cfg)
         self._jit_cache: dict = {}
         self._state_shardings = None
+        self._has_rec: Optional[bool] = None
 
     @property
     def mesh(self):
@@ -135,20 +137,26 @@ class InferenceEngine:
             state = jax.device_put(state, self.state_shardings(state))
         return state
 
-    def assign_pages(self, state: InferenceState, slot: int,
-                     pages) -> InferenceState:
+    def assign_pages(self, state: InferenceState, slot: int, pages,
+                     fresh=None) -> InferenceState:
         """Install ``pages`` (an ordered list of physical page ids from the
-        scheduler's free list) as ``slot``'s page row, and reset those
-        pages' position metadata in every layer pool — a page recycled
-        from an evicted request must never leak stale entries into its new
-        owner's attention mask.  Host-side policy hook, outside the jitted
-        steps."""
+        scheduler's free list) as ``slot``'s page row, and reset the
+        position metadata of the FRESH ones in every layer pool — a page
+        recycled from an evicted request must never leak stale entries
+        into its new owner's attention mask.  ``fresh`` defaults to all of
+        ``pages``; a prefix-cache admission passes only its newly-claimed
+        pages so the shared run's cached entries survive the install.
+        Host-side policy hook, outside the jitted steps."""
         assert self.paged, "assign_pages is a paged-mode operation"
         row = np.full((self.pages_per_slot,), -1, np.int32)
         row[:len(pages)] = pages
         table = state.page_table.at[slot].set(jnp.asarray(row))
-        cache = clear_pages(self._cache_axes, state.cache,
-                            jnp.asarray(pages, jnp.int32), self.num_pages)
+        clear = list(pages) if fresh is None else list(fresh)
+        cache = state.cache
+        if clear:
+            cache = clear_pages(self._cache_axes, cache,
+                                jnp.asarray(clear, jnp.int32),
+                                self.num_pages)
         if self._explicit:
             # re-place only what this host-side update touched — the params
             # subtree (hundreds of leaves) is untouched and stays put
@@ -156,6 +164,86 @@ class InferenceEngine:
             cache = jax.device_put(cache, sh.cache)
             table = jax.device_put(table, sh.page_table)
         return state._replace(cache=cache, page_table=table)
+
+    @property
+    def has_recurrent_state(self) -> bool:
+        """True when the arch keeps slot-major recurrent/SSM cache leaves
+        alongside the paged KV pools.  Pages hold only attention KV, so a
+        prefix-cache hit on such an arch must restore the recurrent state
+        at the resume offset from a host-side snapshot (the radix cache
+        stores one per registered page boundary)."""
+        if self._has_rec is None:
+            axes = jax.tree.leaves(self._cache_axes, is_leaf=is_axes)
+            self._has_rec = any("batch" in a for a in axes) if self.paged \
+                else True
+        return self._has_rec
+
+    def copy_pages(self, state: InferenceState, src, dst) -> InferenceState:
+        """Copy-on-write: clone pool pages ``src`` into ``dst`` across
+        every paged KV leaf (k, v and pos).  The scheduler calls this when
+        an admission must write into a page whose refcount it does not
+        exclusively own — the write lands in the private ``dst`` copy and
+        the shared original stays immutable for its other readers."""
+        assert self.paged, "copy_pages is a paged-mode operation"
+        cache = copy_pool_pages(self._cache_axes, state.cache, src, dst)
+        if self._explicit:
+            cache = jax.device_put(cache, self.state_shardings(state).cache)
+        return state._replace(cache=cache)
+
+    def get_slot_state(self, state: InferenceState, slot: int) -> list:
+        """Host snapshot of ``slot``'s recurrent/SSM rows (leaf-aligned,
+        ``None`` per paged KV leaf) — what the prefix cache stores per
+        registered page boundary so a later hit can resume mid-prompt."""
+        assert self.paged, "get_slot_state is a paged-mode operation"
+        return gather_slot_rows(self._cache_axes, state.cache, int(slot))
+
+    def set_slot_state(self, state: InferenceState, slot: int,
+                       rows: list) -> InferenceState:
+        """Restore a ``get_slot_state`` snapshot into ``slot`` (any slot)."""
+        assert self.paged, "set_slot_state is a paged-mode operation"
+        cache = scatter_slot_rows(self._cache_axes, state.cache, int(slot),
+                                  rows)
+        if self._explicit:
+            cache = jax.device_put(cache, self.state_shardings(state).cache)
+        return state._replace(cache=cache)
+
+    def swap_out(self, state: InferenceState, slot: int, pages) -> dict:
+        """Page-aware preemption, out half: ``jax.device_get`` of JUST the
+        victim's pool rows (every paged KV leaf at ``pages``) plus its
+        slot-major recurrent rows and counters.  Together with the host-
+        side request (prompt + generated tokens) the blob is the complete
+        resume state; the pages and the slot can be handed to another
+        request immediately."""
+        assert self.paged, "swap_out is a paged-mode operation"
+        return {
+            "kv": gather_page_rows(self._cache_axes, state.cache, pages),
+            "rec": gather_slot_rows(self._cache_axes, state.cache,
+                                    int(slot)),
+            "pos": int(jax.device_get(state.positions[slot])),
+            "last_tok": int(jax.device_get(state.last_tok[slot])),
+        }
+
+    def swap_in(self, state: InferenceState, slot: int, pages,
+                blob: dict) -> InferenceState:
+        """Restore a ``swap_out`` blob into ``slot`` over freshly-claimed
+        ``pages`` (same count and order as the swap-out run; the physical
+        ids may differ — page contents are keyed by absolute position).
+        The victim resumes decoding exactly where it was preempted."""
+        assert self.paged, "swap_in is a paged-mode operation"
+        state = self.assign_pages(state, slot, pages)
+        cache = scatter_page_rows(self._cache_axes, state.cache, pages,
+                                  blob["kv"])
+        cache = scatter_slot_rows(self._cache_axes, cache, int(slot),
+                                  blob["rec"])
+        positions = state.positions.at[slot].set(blob["pos"])
+        last_tok = state.last_tok.at[slot].set(blob["last_tok"])
+        if self._explicit:
+            sh = self.state_shardings(state)
+            cache = jax.device_put(cache, sh.cache)
+            positions = jax.device_put(positions, sh.positions)
+            last_tok = jax.device_put(last_tok, sh.last_tok)
+        return state._replace(cache=cache, positions=positions,
+                              last_tok=last_tok)
 
     def release_pages(self, state: InferenceState,
                       slot: int) -> InferenceState:

@@ -19,6 +19,29 @@ Paged engines add two policy layers:
     prompt's prefill.  ``stats["max_decode_gap_s"]`` records the worst
     stall in-flight decodes actually experienced.
 
+PREFIX CACHE (``prefix_cache=True``): the free list grows into a
+refcounted radix cache (:class:`RadixPagePool`).  A finished prefill
+REGISTERS its full prompt pages under their token-prefix keys; a later
+admission walks its prompt page by page against the trie and maps every
+fully-matched page into its own table by bumping the page's refcount —
+zero prefill compute and zero KV writes for the shared run, with prefill
+resuming at the divergence offset through the ``insert_chunk`` /
+``pos_start`` machinery.  A page is COPY-ON-WRITE duplicated only when
+the admission must write inside a shared page (a prompt fully covered by
+cached pages still re-inserts its final token for the first-token
+logits).  Recurrent/SSM state is slot-major — not in pages — so on
+hybrid archs the cache also stores a host-side recurrent snapshot per
+registered page boundary and the resume offset is capped to boundaries
+with a snapshot; replay genuinely starts at the divergence point.
+
+PAGE-AWARE PREEMPTION (``preempt=True``): when admission would defer on
+page exhaustion, the scheduler swaps out a victim slot — most recently
+admitted first — by ``jax.device_get`` of just the victim's pool rows
+plus its recurrent rows (``engine.swap_out``), frees its pages and slot,
+and restores it later (``engine.swap_in``) when pages return.  A traffic
+burst degrades tail latency instead of refusing admission, and every
+stream stays bit-identical to the unpreempted run.
+
 SPECULATIVE DECODING (``spec_k > 0``, paged engines): instead of one
 token per fused step, each active slot asks a :class:`~repro.serve.
 speculative.Drafter` for up to ``spec_k`` guessed next tokens and the
@@ -42,9 +65,9 @@ starts (a second batch is never polluted by the first's throughput or
 from __future__ import annotations
 
 import time
-from collections import deque
+from collections import Counter, OrderedDict, deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -99,12 +122,243 @@ class PagePool:
         self._check()
         return pages
 
+    def table(self, slot: int) -> List[int]:
+        """The ordered page run ``slot`` currently owns (its page row)."""
+        return list(self._owned[slot])
+
     def _check(self) -> None:
         seen = list(self._free) + [p for ps in self._owned.values()
                                    for p in ps]
         assert len(seen) == len(set(seen)) == self.num_pages, \
             f"page conservation broken: {len(set(seen))} distinct of " \
             f"{len(seen)} tracked vs {self.num_pages} total"
+
+
+class RadixPagePool(PagePool):
+    """Refcounted radix/prefix cache over the physical page pool.
+
+    Every page is in exactly one of three states:
+
+      * FREE        — on the free list, content meaningless;
+      * IN USE      — mapped by >= 1 slot page tables; ``refcount(p)`` ==
+                      the number of slots mapping it (1 = private,
+                      > 1 = shared);
+      * CACHED      — refcount 0 but REGISTERED in the radix trie: its KV
+                      content backs a token-prefix key and can be mapped
+                      by a future admission (refcount bump, zero prefill).
+                      Cached pages are reclaimed LRU-first when the free
+                      list runs short, unregistering their keys.
+
+    The trie is host-side and page-granular: key = the full token prefix
+    up to a page boundary, value = the physical page holding that page's
+    KV.  ``match`` walks a prompt boundary by boundary; ``admit`` maps the
+    matched run plus fresh tail pages into a slot in one transaction, with
+    copy-on-write replacing any shared page the slot must write into.
+    ``register`` inserts a finished prefill's full prompt pages (plus
+    optional per-boundary recurrent snapshots for hybrid archs).
+
+    PR 5's conservation invariant generalizes: free + cached + in-use
+    partition the pool exactly, and the sum of refcounts equals the total
+    page-table occupancy (``pages_in_tables``) — re-checked after every
+    operation and driven by the hypothesis test in ``test_property.py``."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        super().__init__(num_pages)
+        self.page_size = int(page_size)
+        self._ref: Dict[int, int] = {}              # page -> #owning slots
+        self._trie: Dict[Tuple[int, ...], int] = {}  # prefix key -> page
+        self._key: Dict[int, Tuple[int, ...]] = {}   # page -> its key
+        self._cached: "OrderedDict[int, None]" = OrderedDict()  # LRU
+        self._snaps: Dict[Tuple[int, ...], Any] = {}  # key -> rec snapshot
+
+    # -- accounting --------------------------------------------------------
+    def available(self) -> int:
+        """Pages an admission can claim: free now + cached-reclaimable."""
+        return len(self._free) + len(self._cached)
+
+    def cached_pages(self) -> int:
+        return len(self._cached)
+
+    def in_use_pages(self) -> set:
+        return set(self._ref)
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
+    def can_admit(self, shared: Sequence[int], n_fresh: int) -> bool:
+        """True when ``n_fresh`` pages can be claimed without reclaiming
+        any of the ``shared`` pages the same admission wants to map."""
+        keep = set(shared)
+        reclaimable = len(self._free) + sum(
+            1 for p in self._cached if p not in keep)
+        return n_fresh <= reclaimable
+
+    # -- the prefix walk ---------------------------------------------------
+    def match(self, prompt) -> Tuple[List[int], int]:
+        """Longest run of registered full pages covering ``prompt``'s
+        prefix: ([physical pages], matched token count).  Touches the LRU
+        so a hot prefix survives pool pressure."""
+        ps = self.page_size
+        prompt = [int(t) for t in np.asarray(prompt).ravel()]
+        pages: List[int] = []
+        for i in range(len(prompt) // ps):
+            p = self._trie.get(tuple(prompt[:(i + 1) * ps]))
+            if p is None:
+                break
+            pages.append(p)
+            if p in self._cached:
+                self._cached.move_to_end(p)
+        return pages, len(pages) * ps
+
+    def snapshot(self, key: Tuple[int, ...]):
+        """The recurrent-state snapshot registered at prefix ``key``."""
+        return self._snaps[key]
+
+    def has_snapshot(self, key: Tuple[int, ...]) -> bool:
+        return key in self._snaps
+
+    # -- transactions ------------------------------------------------------
+    def _reclaim(self, n: int) -> None:
+        """Grow the free list to ``n`` pages by evicting cached (ref-0)
+        pages LRU-first, unregistering their keys and snapshots."""
+        while len(self._free) < n:
+            if not self._cached:
+                raise ValueError(f"want {n} free pages, only "
+                                 f"{len(self._free)} free and nothing "
+                                 f"cached to reclaim (defer admission)")
+            p, _ = self._cached.popitem(last=False)
+            key = self._key.pop(p)
+            del self._trie[key]
+            self._snaps.pop(key, None)
+            self._free.append(p)
+
+    def alloc(self, slot: int, n: int) -> List[int]:
+        """Claim ``n`` fresh private pages (no sharing) — the cold path
+        and the preemption-restore path."""
+        if slot in self._owned:
+            raise ValueError(f"slot {slot} already owns pages "
+                             f"{self._owned[slot]} (double admission)")
+        if n < 1:
+            raise ValueError(f"slot {slot}: cannot allocate {n} pages")
+        if n > self.available():
+            raise ValueError(f"slot {slot}: wants {n} pages, only "
+                             f"{self.available()} free/cached "
+                             f"(defer admission)")
+        self._reclaim(n)
+        pages = [self._free.popleft() for _ in range(n)]
+        for p in pages:
+            self._ref[p] = 1
+        self._owned[slot] = pages
+        self._check()
+        return pages
+
+    def admit(self, slot: int, shared: Sequence[int], n_tail: int,
+              cow_idx: Sequence[int] = ()) -> List[Tuple[int, int]]:
+        """Map ``shared`` (refcount bump each) followed by ``n_tail``
+        fresh pages into ``slot``'s table, copy-on-writing the shared
+        pages at indices ``cow_idx`` (the ones the slot must write into).
+        Returns the (src, dst) CoW pairs so the scheduler can clone their
+        KV content; the slot's table is ``self.table(slot)`` afterwards."""
+        if slot in self._owned:
+            raise ValueError(f"slot {slot} already owns pages "
+                             f"{self._owned[slot]} (double admission)")
+        n_fresh = n_tail + len(cow_idx)
+        if not self.can_admit(shared, n_fresh):
+            raise ValueError(f"slot {slot}: wants {n_fresh} fresh pages "
+                             f"beyond the {len(shared)} shared ones "
+                             f"(defer admission)")
+        for p in shared:
+            if p not in self._ref and p not in self._cached:
+                raise ValueError(f"page {p} is neither in use nor cached "
+                                 f"(stale match?)")
+        owned = list(shared)
+        for p in owned:                     # bump before reclaiming so the
+            if p in self._cached:           # shared run cannot be evicted
+                del self._cached[p]         # out from under this admission
+            self._ref[p] = self._ref.get(p, 0) + 1
+        self._owned[slot] = owned           # _release needs ownership set
+        self._reclaim(n_fresh)
+        cow_pairs = []
+        for i in cow_idx:
+            src, dst = owned[i], self._free.popleft()
+            self._release_one(src)
+            self._ref[dst] = 1
+            owned[i] = dst
+            cow_pairs.append((src, dst))
+        for _ in range(n_tail):
+            p = self._free.popleft()
+            self._ref[p] = 1
+            owned.append(p)
+        self._check()
+        return cow_pairs
+
+    def _release_one(self, p: int) -> None:
+        """Drop one reference to ``p``; a last owner leaves it CACHED when
+        registered (its content still backs a trie key), FREE otherwise."""
+        self._ref[p] -= 1
+        if self._ref[p] == 0:
+            del self._ref[p]
+            if p in self._key:
+                self._cached[p] = None      # LRU tail = most recent
+            else:
+                self._free.append(p)
+
+    def free(self, slot: int) -> List[int]:
+        if slot not in self._owned:
+            raise KeyError(f"slot {slot} owns no pages (double free?)")
+        pages = self._owned.pop(slot)
+        for p in pages:
+            self._release_one(p)
+        self._check()
+        return pages
+
+    def register(self, slot: int, prompt, snaps: Optional[Dict] = None):
+        """Insert ``slot``'s full prompt pages into the trie (key = token
+        prefix up to each page boundary).  Keys already registered keep
+        their original page.  ``snaps`` maps page-boundary index (1-based
+        page count) to a recurrent snapshot; when given, a boundary
+        WITHOUT a snapshot is skipped — a hybrid arch must never match a
+        prefix it cannot resume from."""
+        ps = self.page_size
+        prompt = [int(t) for t in np.asarray(prompt).ravel()]
+        owned = self._owned[slot]
+        for i in range(min(len(prompt) // ps, len(owned))):
+            key = tuple(prompt[:(i + 1) * ps])
+            if key in self._trie:
+                continue
+            if snaps is not None and (i + 1) not in snaps:
+                continue
+            p = owned[i]
+            if p in self._key:              # already backs another prefix
+                continue
+            self._trie[key] = p
+            self._key[p] = key
+            if snaps is not None:
+                self._snaps[key] = snaps[i + 1]
+        self._check()
+
+    # -- the generalized conservation invariant ----------------------------
+    def _check(self) -> None:
+        owned = [p for ps in self._owned.values() for p in ps]
+        for slot, ps in self._owned.items():
+            assert len(ps) == len(set(ps)), \
+                f"slot {slot} maps page(s) twice: {ps}"
+        counts = dict(Counter(owned))
+        assert counts == self._ref, \
+            f"refcounts {self._ref} != table occupancy {counts}"
+        fr, ca, iu = set(self._free), set(self._cached), set(self._ref)
+        assert len(self._free) == len(fr), "free list holds duplicates"
+        assert not (fr & ca) and not (fr & iu) and not (ca & iu), \
+            "page in two ownership states at once"
+        assert fr | ca | iu == set(range(self.num_pages)), \
+            f"page conservation broken: {len(fr)} free + {len(ca)} " \
+            f"cached + {len(iu)} in use != {self.num_pages} total"
+        assert sum(self._ref.values()) == self.pages_in_tables()
+        assert {p: k for k, p in self._trie.items()} == self._key, \
+            "trie and reverse key map diverged"
+        assert ca <= set(self._key), "cached page without a trie key"
+        assert set(self._snaps) <= set(self._trie), \
+            "snapshot for an unregistered prefix"
 
 
 @dataclass
@@ -119,10 +373,40 @@ class Request:
 
 @dataclass
 class _Admission:
-    """A request whose prompt is being chunk-prefilled into its slot."""
+    """A request whose prompt is being chunk-prefilled into its slot.
+
+    ``cursor`` starts at the prefix-cache resume offset (0 on a cold
+    admission); ``capture`` asks each page-boundary chunk to snapshot the
+    slot's recurrent state so the finished prompt can register resumable
+    prefixes on hybrid archs."""
     r: Request
     slot: int
     cursor: int = 0                         # prompt tokens inserted so far
+    capture: bool = False                   # snapshot recurrent state at
+    snaps: Dict[int, Any] = field(default_factory=dict)  # page boundaries
+
+
+@dataclass
+class _AdmitPlan:
+    """Host-side page plan for one paged admission: how much of the prompt
+    the prefix cache already holds and what must be claimed fresh."""
+    total: int                              # pages the slot will own
+    shared: List[int] = field(default_factory=list)  # matched cached pages
+    resume: int = 0                         # prefill resumes at this token
+    cow_idx: List[int] = field(default_factory=list)  # shared idx to CoW
+    snap_key: Optional[Tuple[int, ...]] = None  # recurrent snapshot to load
+
+    @property
+    def fresh_needed(self) -> int:
+        return self.total - len(self.shared) + len(self.cow_idx)
+
+
+@dataclass
+class _Swapped:
+    """A preempted request: its host-side swap blob awaiting restore."""
+    r: Request
+    blob: Dict[str, Any]
+    n_pages: int
 
 
 class Scheduler:
@@ -130,7 +414,8 @@ class Scheduler:
 
     def __init__(self, engine: InferenceEngine, state: InferenceState, *,
                  eos_id: Optional[int] = None, spec_k: int = 0,
-                 drafter=None):
+                 drafter=None, prefix_cache: bool = False,
+                 preempt: bool = False):
         self.engine = engine
         self.state = state
         self.eos_id = eos_id
@@ -141,6 +426,11 @@ class Scheduler:
             raise ValueError("speculative decoding runs over the paged KV "
                              "pool; spec_k > 0 requires paged=True "
                              "(spec_k=0 is the parity baseline)")
+        self.prefix_cache = bool(prefix_cache)
+        self.preempt = bool(preempt)
+        if (self.prefix_cache or self.preempt) and not engine.paged:
+            raise ValueError("prefix_cache/preempt are page-pool policies; "
+                             "both require paged=True")
         if self.spec_k and drafter is None:
             from repro.serve.speculative import NgramDrafter
             drafter = NgramDrafter()
@@ -151,8 +441,19 @@ class Scheduler:
         self.stats = self._fresh_stats()
         #: accumulated across every finished/aborted run() on this scheduler
         self.lifetime_stats = self._fresh_stats()
-        self._pages = PagePool(engine.num_pages) if engine.paged else None
+        if engine.paged:
+            self._pages = RadixPagePool(engine.num_pages, engine.page_size) \
+                if self.prefix_cache else PagePool(engine.num_pages)
+        else:
+            self._pages = None
         self._last_decode_t: Optional[float] = None
+        #: per-request time-to-first-token for the current run (seconds
+        #: from run() start to the request's first generated token)
+        self.ttft: Dict[int, float] = {}
+        self._run_t0: float = 0.0
+        self._defer_counts: Dict[int, int] = {}
+        self._admit_seq: Dict[int, int] = {}   # slot -> admission sequence
+        self._seq = 0
 
     @staticmethod
     def _fresh_stats() -> Dict[str, float]:
@@ -165,11 +466,23 @@ class Scheduler:
                 "max_decode_gap_s": 0.0,
                 # speculative counters: proposed drafts, drafts accepted,
                 # verify rounds (a subset of decode_steps)
-                "spec_proposed": 0, "spec_accepted": 0, "spec_steps": 0}
+                "spec_proposed": 0, "spec_accepted": 0, "spec_steps": 0,
+                # admission-pressure counters: total defer cycles across
+                # requests, and the worst single request's defer count
+                "deferred_admissions": 0, "max_defer_cycles": 0,
+                # prefix-cache counters: admissions that consulted the
+                # trie, admissions that mapped >= 1 cached page, prefill
+                # tokens skipped by resuming past the shared run, and
+                # pages copy-on-write duplicated
+                "prefix_lookups": 0, "prefix_hits": 0,
+                "prefix_hit_tokens": 0, "cow_pages": 0,
+                # page-aware preemption: victims swapped to host, swapped
+                # requests restored into a slot
+                "preemptions": 0, "restores": 0}
 
     def _fold_lifetime(self) -> None:
         for k, v in self.stats.items():
-            if k == "max_decode_gap_s":     # a max, not a sum
+            if k in ("max_decode_gap_s", "max_defer_cycles"):  # maxima
                 self.lifetime_stats[k] = max(self.lifetime_stats[k], v)
             else:
                 self.lifetime_stats[k] += v
@@ -210,6 +523,106 @@ class Scheduler:
         pages = self._pages.alloc(slot, self._pages_needed(r))
         self.state = self.engine.assign_pages(self.state, slot, pages)
 
+    def _plan(self, r: Request) -> _AdmitPlan:
+        """Page plan for admitting ``r``: walk the prefix cache (when on)
+        and decide the shared run, the prefill resume offset, and which
+        shared pages must be copy-on-write duplicated."""
+        total = self._pages_needed(r)
+        if not self.prefix_cache or "patches" in r.extras:
+            return _AdmitPlan(total)
+        prompt = np.asarray(r.prompt, np.int32).ravel()
+        shared, matched = self._pages.match(prompt)
+        if not shared:
+            return _AdmitPlan(total)
+        ps = self.engine.page_size
+        if self.engine.has_recurrent_state:
+            # recurrent/SSM state lives in slot rows, not pages: resume
+            # only from a boundary with a registered snapshot, and always
+            # keep >= 1 prompt token to re-insert (the first-token logits
+            # come out of the prefill) — so the resume point is a boundary
+            # and no shared page is ever written into (no CoW needed)
+            shared = shared[:(len(prompt) - 1) // ps]
+            if not shared:
+                return _AdmitPlan(total)
+            matched = len(shared) * ps
+        resume = min(matched, len(prompt) - 1)
+        # a prompt fully covered by cached pages still re-inserts its last
+        # token for the first-token logits: that write lands INSIDE the
+        # final shared page, which therefore needs a private CoW copy
+        cow_idx = list(range(resume // ps, len(shared)))
+        snap_key = tuple(int(t) for t in prompt[:resume]) \
+            if self.engine.has_recurrent_state else None
+        return _AdmitPlan(total, list(shared), resume, cow_idx, snap_key)
+
+    def _fits(self, plan: _AdmitPlan) -> bool:
+        if isinstance(self._pages, RadixPagePool):
+            return self._pages.can_admit(plan.shared, plan.fresh_needed)
+        return self._pages.available() >= plan.total
+
+    def _claim_pages(self, r: Request, slot: int, plan: _AdmitPlan) -> None:
+        """Execute ``plan``: map shared + fresh pages into ``slot``'s page
+        table, clone CoW pages device-side, and load the recurrent
+        snapshot the resume point needs (hybrid archs)."""
+        if not isinstance(self._pages, RadixPagePool):
+            self._alloc_pages(r, slot)
+            return
+        cow_pairs = self._pages.admit(
+            slot, plan.shared, plan.total - len(plan.shared), plan.cow_idx)
+        row = self._pages.table(slot)
+        keep = set(plan.shared) - {s for s, _ in cow_pairs}
+        # only non-shared pages get their pos metadata cleared: the shared
+        # run's pos entries ARE the cached KV's validity record
+        fresh = [p for p in row if p not in keep]
+        self.state = self.engine.assign_pages(self.state, slot, row,
+                                              fresh=fresh)
+        if cow_pairs:
+            self.state = self.engine.copy_pages(
+                self.state, [s for s, _ in cow_pairs],
+                [d for _, d in cow_pairs])
+            self.stats["cow_pages"] += len(cow_pairs)
+        self.stats["prefix_lookups"] += 1
+        if plan.shared:
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_hit_tokens"] += plan.resume
+        if plan.snap_key is not None:
+            self.state = self.engine.set_slot_state(
+                self.state, slot, self._pages.snapshot(plan.snap_key))
+
+    def _defer(self, r: Request) -> None:
+        self.stats["deferred_admissions"] += 1
+        n = self._defer_counts.get(r.rid, 0) + 1
+        self._defer_counts[r.rid] = n
+        self.stats["max_defer_cycles"] = max(
+            self.stats["max_defer_cycles"], n)
+
+    def _note_first(self, r: Request) -> None:
+        if r.rid not in self.ttft:
+            self.ttft[r.rid] = time.perf_counter() - self._run_t0
+
+    def _next_seq(self) -> int:
+        self._seq += 1
+        return self._seq
+
+    def _preempt_one(self, active: Dict[int, Request], free: deque,
+                     swapped: "deque[_Swapped]") -> None:
+        """Swap out the most recently admitted active slot: device_get of
+        just its pool rows + recurrent rows, free its pages and slot, park
+        the request on the restore queue.  ALL its pages travel in the
+        blob — shared ones included, since their cached copies may be
+        reclaimed before the restore — and the restore claims all-fresh
+        pages, so a swapped request never depends on cache residency."""
+        slot = max(active, key=lambda s: self._admit_seq.get(s, 0))
+        r = active.pop(slot)
+        pages = self._pages.table(slot)
+        blob = self.engine.swap_out(self.state, slot, pages)
+        self._pages.free(slot)
+        self.state = self.engine.release_pages(self.state, slot)
+        free.append(slot)
+        if self.drafter is not None:
+            self.drafter.release(slot)
+        swapped.append(_Swapped(r, blob, len(pages)))
+        self.stats["preemptions"] += 1
+
     def _evict(self, slot: int, free: deque) -> None:
         free.append(slot)
         if self.engine.paged:
@@ -242,12 +655,22 @@ class Scheduler:
         r.generated.append(first)
         r.slot = slot
         self.slot_history[slot].append(r.rid)
+        self._note_first(r)
 
     def _prefill_one_chunk(self, adm: _Admission) -> bool:
-        """Insert the next chunk of ``adm``; True once the prompt is done."""
+        """Insert the next chunk of ``adm``; True once the prompt is done.
+
+        ``capture`` admissions clip every chunk to the next page boundary
+        and snapshot the slot's recurrent state there, so each registered
+        prefix page carries the state a future admission resumes from."""
         r = adm.r
         prompt = np.asarray(r.prompt, np.int32)
-        c = min(self.engine.prefill_chunk, len(prompt) - adm.cursor)
+        remaining = len(prompt) - adm.cursor
+        c = self.engine.prefill_chunk or remaining
+        if adm.capture:
+            ps = self.engine.page_size
+            c = min(c, ps - adm.cursor % ps)
+        c = min(c, remaining)
         toks = prompt[None, adm.cursor:adm.cursor + c]
         t0 = time.perf_counter()
         self.state, tok = self.engine.insert_chunk(
@@ -257,11 +680,18 @@ class Scheduler:
         self.stats["prefill_tokens"] += c
         self.stats["prefill_chunks"] += 1
         adm.cursor += c
+        if adm.capture and adm.cursor % self.engine.page_size == 0:
+            adm.snaps[adm.cursor // self.engine.page_size] = \
+                self.engine.get_slot_state(self.state, adm.slot)
         if adm.cursor < len(prompt):
             return False
         r.generated.append(first)           # final chunk's greedy token
         r.slot = adm.slot
         self.slot_history[adm.slot].append(r.rid)
+        self._note_first(r)
+        if self.prefix_cache and "patches" not in r.extras:
+            self._pages.register(adm.slot, prompt,
+                                 snaps=adm.snaps if adm.capture else None)
         return True
 
     # -- speculation -------------------------------------------------------
@@ -309,6 +739,11 @@ class Scheduler:
         runs accumulate in ``lifetime_stats``."""
         self.stats = self._fresh_stats()
         self._last_decode_t = None
+        self.ttft = {}
+        self._run_t0 = time.perf_counter()
+        self._defer_counts = {}
+        self._admit_seq = {}
+        self._seq = 0
         try:
             return self._run(requests)
         finally:
@@ -323,28 +758,70 @@ class Scheduler:
         pending = deque(requests)
         active: Dict[int, Request] = {}
         admissions: deque[_Admission] = deque()
+        swapped: deque[_Swapped] = deque()
         free = deque(range(self.engine.slots))
         chunk = self.engine.prefill_chunk if self.engine.paged else 0
-        while pending or active or admissions:
+        while pending or active or admissions or swapped:
             progressed = False
+            # restore preempted requests first (their pages and slot were
+            # taken to absorb a burst — they are owed the next headroom);
+            # a restore claims all-fresh pages and never preempts, so a
+            # preempt/restore pair can never livelock
+            while swapped and free:
+                sw = swapped[0]
+                if self._pages.available() < sw.n_pages:
+                    self._defer(sw.r)
+                    break
+                swapped.popleft()
+                slot = free.popleft()
+                pages = self._pages.alloc(slot, sw.n_pages)
+                self.state = self.engine.swap_in(self.state, slot, pages,
+                                                 sw.blob)
+                self._admit_seq[slot] = self._next_seq()
+                sw.r.slot = slot
+                self.slot_history[slot].append(sw.r.rid)
+                active[slot] = sw.r
+                self.stats["restores"] += 1
+                progressed = True
             # admit pending requests into free slots (claiming pages first
             # in paged mode — a short free list defers admission until an
-            # eviction returns pages)
+            # eviction returns pages, unless preemption can take them from
+            # the most recently admitted active slot)
             while pending and free:
                 r = pending[0]
-                if self.engine.paged and \
-                        self._pages.available() < self._pages_needed(r):
-                    break
+                plan = self._plan(r) if self.engine.paged else None
+                if self.engine.paged and not self._fits(plan):
+                    while self.preempt and active and \
+                            not self._fits(plan) and plan.fresh_needed <= \
+                            self._pages.available() + sum(
+                                len(self._pages.table(s)) for s in active):
+                        self._preempt_one(active, free, swapped)
+                        progressed = True
+                    if not self._fits(plan):
+                        self._defer(r)
+                        break
                 pending.popleft()
                 slot = free.popleft()
+                self._admit_seq[slot] = self._next_seq()
                 if self.engine.paged:
-                    self._alloc_pages(r, slot)
-                if self._chunkable(r, chunk):
-                    admissions.append(_Admission(r, slot))
+                    self._claim_pages(r, slot, plan)
+                resume = plan.resume if plan is not None else 0
+                capture = self.prefix_cache \
+                    and self.engine.has_recurrent_state \
+                    and "patches" not in r.extras
+                if resume > 0 or self._chunkable(r, chunk) or \
+                        (capture and len(np.asarray(r.prompt))
+                         >= self.engine.page_size):
+                    admissions.append(_Admission(r, slot, cursor=resume,
+                                                 capture=capture))
                     progressed = True
                 else:
                     self._admit(r, slot)
                     progressed = True
+                    if self.prefix_cache and not capture \
+                            and "patches" not in r.extras:
+                        self._pages.register(
+                            slot, np.asarray(r.prompt, np.int32))
                     if self._done(r):       # EOS straight out of prefill
                         self._evict(slot, free)
                     else:
@@ -402,6 +879,6 @@ class Scheduler:
                 # nothing in flight can ever free the pages the head
                 # request needs — admission would spin forever
                 raise RuntimeError(
-                    "admission deadlock: pending requests but no free "
-                    "slot/pages and nothing in flight to evict")
+                    "admission deadlock: pending/swapped requests but no "
+                    "free slot/pages and nothing in flight to evict")
         return {r.rid: list(r.generated) for r in requests}

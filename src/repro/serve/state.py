@@ -28,6 +28,7 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import is_axes
@@ -111,6 +112,106 @@ def clear_pages(axes_tree: Any, cache: Any, pages: jax.Array,
         idx = (slice(None),) * i + (safe,)
         return leaf.at[idx].set(-1, mode="drop")
     return jax.tree.map(_one, axes_tree, cache, is_leaf=is_axes)
+
+
+def _flat_with_axes(axes_tree: Any, tree: Any):
+    """Leaf-aligned (axes, leaves, treedef) triple: the axes tree is
+    structurally identical to the cache tree, so flattening both (with
+    ``is_axes`` stopping at spec tuples) yields parallel lists — the
+    shape every page/slot row helper below works over."""
+    ax = jax.tree.leaves(axes_tree, is_leaf=is_axes)
+    leaves, treedef = jax.tree.flatten(tree)
+    if len(ax) != len(leaves):
+        raise ValueError(f"axes tree ({len(ax)} leaves) does not match "
+                         f"cache tree ({len(leaves)} leaves)")
+    return ax, leaves, treedef
+
+
+def copy_pool_pages(axes_tree: Any, cache: Any, src: jax.Array,
+                    dst: jax.Array) -> Any:
+    """Copy-on-write: duplicate pool pages ``src`` into ``dst`` across
+    every paged KV leaf — k, v AND pos, so the new owner's reads see the
+    original pages' entries while its writes land in private copies.
+    Recurrent/SSM leaves (slot-major, no "pages" axis) pass through."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def _one(ax, leaf):
+        if "pages" not in ax:
+            return leaf
+        i = ax.index("pages")
+        rows = jnp.take(leaf, src, axis=i)
+        idx = (slice(None),) * i + (dst,)
+        return leaf.at[idx].set(rows)
+    return jax.tree.map(_one, axes_tree, cache, is_leaf=is_axes)
+
+
+def gather_page_rows(axes_tree: Any, cache: Any, pages) -> list:
+    """Host (numpy) copies of the pool rows ``pages`` from every paged KV
+    leaf, as a flat leaf-aligned list (``None`` for slot-major leaves) —
+    the swap-out half of page-aware preemption: ``jax.device_get`` of
+    just the victim's rows, never the whole pool."""
+    ax, leaves, _ = _flat_with_axes(axes_tree, cache)
+    idx = jnp.asarray(pages, jnp.int32)
+    out = []
+    for a, leaf in zip(ax, leaves):
+        if "pages" not in a:
+            out.append(None)
+            continue
+        i = a.index("pages")
+        out.append(np.asarray(jax.device_get(jnp.take(leaf, idx, axis=i))))
+    return out
+
+
+def scatter_page_rows(axes_tree: Any, cache: Any, pages, rows: list) -> Any:
+    """Write ``rows`` (a ``gather_page_rows`` blob) back into pool pages
+    ``pages`` — the swap-in half.  The physical page ids may differ from
+    the ones the blob was gathered at: page contents are keyed by absolute
+    positions (the pos leaf travels in the blob), not by page id."""
+    ax, leaves, treedef = _flat_with_axes(axes_tree, cache)
+    idx = jnp.asarray(pages, jnp.int32)
+    new = []
+    for a, leaf, r in zip(ax, leaves, rows):
+        if r is None:
+            new.append(leaf)
+            continue
+        i = a.index("pages")
+        sel = (slice(None),) * i + (idx,)
+        new.append(leaf.at[sel].set(jnp.asarray(r, leaf.dtype)))
+    return jax.tree.unflatten(treedef, new)
+
+
+def gather_slot_rows(axes_tree: Any, cache: Any, slot: int) -> list:
+    """Host copies of row ``slot`` from every slot-major (recurrent/SSM)
+    cache leaf, leaf-aligned list with ``None`` for paged KV leaves.
+    Pages hold only attention KV, so this is the rest of a slot's resume
+    state: prefix-cache snapshots at page boundaries and the recurrent
+    half of a preemption swap blob."""
+    ax, leaves, _ = _flat_with_axes(axes_tree, cache)
+    out = []
+    for a, leaf in zip(ax, leaves):
+        if "batch" not in a:
+            out.append(None)
+            continue
+        i = a.index("batch")
+        out.append(np.asarray(jax.device_get(jnp.take(leaf, slot, axis=i))))
+    return out
+
+
+def scatter_slot_rows(axes_tree: Any, cache: Any, slot: int,
+                      rows: list) -> Any:
+    """Write a ``gather_slot_rows`` blob into row ``slot`` (any slot — the
+    restore target need not be the slot the blob was gathered from)."""
+    ax, leaves, treedef = _flat_with_axes(axes_tree, cache)
+    new = []
+    for a, leaf, r in zip(ax, leaves, rows):
+        if r is None:
+            new.append(leaf)
+            continue
+        i = a.index("batch")
+        idx = (slice(None),) * i + (slot,)
+        new.append(leaf.at[idx].set(jnp.asarray(r, leaf.dtype)))
+    return jax.tree.unflatten(treedef, new)
 
 
 def select_verified(axes_tree: Any, stacked: Any, old: Any, n: jax.Array,

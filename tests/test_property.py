@@ -139,3 +139,80 @@ def test_page_pool_conservation(num_pages, data):
     for slot in sorted(model):
         pool.free(slot)
     assert pool.available() == num_pages and pool.pages_in_tables() == 0
+
+
+# ---------------------------------------------------------------------------
+# Refcounted radix prefix cache (PR 7): conservation generalizes — free +
+# cached + in-use partition the pool, sum(refcounts) == table occupancy
+# ---------------------------------------------------------------------------
+@given(st.integers(4, 24), st.data())
+def test_radix_page_pool_refcount_conservation(num_pages, data):
+    """Interleaved admit(shared run + CoW)/register/free sequences over a
+    tiny token alphabet (forcing prefix collisions) never break refcount
+    conservation: every page is free, cached (refcount 0 but registered),
+    or in use (refcount >= 1) — exactly one of the three — and the sum of
+    refcounts equals total page-table occupancy.  The pool's internal
+    ``_check`` re-asserts the full invariant (including trie <-> reverse
+    map bijection) after every operation."""
+    from repro.serve.scheduler import RadixPagePool
+
+    ps = data.draw(st.integers(1, 3), label="page_size")
+    pool = RadixPagePool(num_pages, ps)
+    prompts = {}                        # slot -> prompt (reference model)
+
+    def check():
+        in_use = pool.in_use_pages()
+        assert pool.available() + len(in_use) == num_pages
+        assert sum(pool.refcount(p) for p in in_use) \
+            == pool.pages_in_tables()
+
+    for _ in range(data.draw(st.integers(1, 60), label="ops")):
+        op = data.draw(st.sampled_from(["admit", "free", "register"]),
+                       label="op")
+        if op == "admit":
+            slot = data.draw(st.integers(0, 5), label="slot")
+            prompt = data.draw(
+                st.lists(st.integers(0, 2), min_size=1, max_size=3 * ps),
+                label="prompt")
+            total = -(-len(prompt) // ps) + 1       # prompt + decode room
+            shared, matched = pool.match(prompt)
+            # mirror the scheduler's plan: keep >= 1 token to re-insert;
+            # CoW every shared page the resume point writes into
+            resume = min(matched, len(prompt) - 1)
+            cow_idx = list(range(resume // ps, len(shared)))
+            n_tail = total - len(shared)
+            if slot in prompts or \
+                    not pool.can_admit(shared, n_tail + len(cow_idx)):
+                with pytest.raises(ValueError):
+                    pool.admit(slot, shared, n_tail, cow_idx)
+            else:
+                pairs = pool.admit(slot, shared, n_tail, cow_idx)
+                assert len(pairs) == len(cow_idx)
+                table = pool.table(slot)
+                assert len(table) == len(set(table)) == total
+                for p in table:
+                    assert pool.refcount(p) >= 1
+                # CoW produced private copies: the slot never maps a page
+                # at a write index it shares with another owner
+                for i in cow_idx:
+                    assert pool.refcount(table[i]) == 1
+                prompts[slot] = list(prompt)
+        elif op == "free" and prompts:
+            slot = data.draw(st.sampled_from(sorted(prompts)),
+                             label="victim")
+            freed = pool.free(slot)
+            assert len(freed) == -(-len(prompts.pop(slot)) // ps) + 1
+        elif op == "register" and prompts:
+            slot = data.draw(st.sampled_from(sorted(prompts)),
+                             label="registrant")
+            pool.register(slot, prompts[slot])
+        else:
+            with pytest.raises(KeyError):
+                pool.free(data.draw(st.integers(0, 5), label="ghost"))
+        check()
+    # drain: in-use pages leave through free; registered content stays
+    # cached (still reclaimable), so availability returns to the full pool
+    for slot in sorted(prompts):
+        pool.free(slot)
+    check()
+    assert pool.available() == num_pages and pool.pages_in_tables() == 0

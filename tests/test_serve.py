@@ -56,13 +56,14 @@ def _requests(cfg, lens, gen=GEN, seed=0):
     return reqs
 
 
-def _serve(cfg, reqs, *, slots, eos=None, mesh=None, max_len=None, **kw):
+def _serve(cfg, reqs, *, slots, eos=None, mesh=None, max_len=None,
+           sched_kw=None, **kw):
     eng = InferenceEngine(cfg, slots=slots, mesh=mesh, dtype=jnp.float32,
                           max_len=max_len or (PROMPT + GEN
                                               + (cfg.num_patches or 0)),
                           **kw)
     state = eng.init_state(T.init(cfg, jax.random.key(0)))
-    sched = Scheduler(eng, state, eos_id=eos)
+    sched = Scheduler(eng, state, eos_id=eos, **(sched_kw or {}))
     return sched.run(reqs), sched
 
 
@@ -195,6 +196,12 @@ def test_page_exhaustion_defers_admission():
                         page_size=4, num_pages=pages_one)
     assert got == ref
     assert sched.stats["decode_steps"] >= 3 * (GEN - 1)  # served serially
+    # the waiting isn't silent: every deferred admission cycle is counted,
+    # and the worst single request's wait is reported
+    assert sched.stats["deferred_admissions"] > 0
+    assert sched.stats["max_defer_cycles"] > 0
+    assert sched.lifetime_stats["max_defer_cycles"] \
+        == sched.stats["max_defer_cycles"]
     with pytest.raises(ValueError, match="pages"):
         _serve(cfg, _requests(cfg, [PROMPT]), slots=1, paged=True,
                page_size=4, num_pages=1)
@@ -222,6 +229,93 @@ def test_chunked_admission_does_not_perturb_inflight_streams():
     # the victim stream (1 prefill + 9 decode tokens) ran to completion
     # fused with the other slots — its decodes bracket the admission
     assert sched.stats["decode_steps"] >= 9
+
+
+# ---------------------------------------------------------------------------
+# Refcounted prefix cache + page-aware preemption (PR 7)
+# ---------------------------------------------------------------------------
+def _shared_prefix_requests(cfg, shared, tails, gen=GEN, seed=0):
+    """Requests whose prompts share their first ``shared`` tokens."""
+    rng = np.random.default_rng(seed)
+    pre = rng.integers(0, cfg.vocab_size, shared).astype(np.int32)
+    return [Request(rid=i, max_new=gen, prompt=np.concatenate(
+                [pre, rng.integers(0, cfg.vocab_size, t).astype(np.int32)]))
+            for i, t in enumerate(tails)]
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "gemma2-2b",
+                                  "recurrentgemma-2b"])
+def test_prefix_cache_hit_matches_cold_prefill(arch):
+    """The PR's acceptance bar: greedy streams served off prefix-cache
+    hits are bit-identical to the cold-prefill run across attention-only,
+    local/global, and recurrent-hybrid archs.  On the hybrid, the resume
+    is boundary-capped and replays the registered recurrent snapshot, so
+    generation genuinely starts from the divergence point."""
+    cfg = _ample_moe(smoke_variant(get_config(arch)))
+    mk = lambda: _shared_prefix_requests(cfg, 24, [4, 4, 6])
+    ref, _ = _serve(cfg, mk(), slots=2, max_len=48, paged=True,
+                    page_size=8, prefill_chunk=6)
+    got, sched = _serve(cfg, mk(), slots=2, max_len=48, paged=True,
+                        page_size=8, prefill_chunk=6,
+                        sched_kw={"prefix_cache": True})
+    assert got == ref, arch
+    # at least the request admitted after the first registration hit the
+    # cache, skipping the full shared run (3 pages = 24 tokens)
+    assert sched.stats["prefix_hits"] >= 1
+    assert sched.stats["prefix_hit_tokens"] >= 24
+
+
+def test_prefix_cache_exact_match_copy_on_write():
+    """A prompt fully covered by cached pages still re-inserts its final
+    token for the first-token logits — that write must land in a private
+    copy-on-write page, never in the shared original, and the stream must
+    still bit-match the cold run."""
+    cfg = smoke_variant(get_config("qwen2-1.5b"))
+    eng = InferenceEngine(cfg, slots=2, max_len=32, dtype=jnp.float32,
+                          paged=True, page_size=8)
+    state = eng.init_state(T.init(cfg, jax.random.key(0)))
+    sched = Scheduler(eng, state, prefix_cache=True)
+    rng = np.random.default_rng(5)
+    p = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)  # 2 full pages
+    cold = sched.run([Request(rid=0, prompt=p.copy(), max_new=GEN)])
+    warm = sched.run([Request(rid=1, prompt=p.copy(), max_new=GEN)])
+    assert warm[1] == cold[0]
+    assert sched.stats["cow_pages"] == 1        # exactly the written page
+    assert sched.stats["prefix_hit_tokens"] == len(p) - 1
+    # lifetime view accumulated both runs' lookups
+    assert sched.lifetime_stats["prefix_lookups"] == 2
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "recurrentgemma-2b"])
+def test_preemption_matches_deferred_run(arch):
+    """Under page pressure the preempting scheduler swaps the youngest
+    active slot to host and restores it later; every stream must
+    bit-match the defer-only baseline (which simply waits), including the
+    recurrent-hybrid arch whose slot state travels in the swap blob."""
+    cfg = _ample_moe(smoke_variant(get_config(arch)))
+    mk = lambda: [Request(rid=i, max_new=4 + 2 * i,
+                          prompt=np.random.default_rng(7 + i).integers(
+                              0, cfg.vocab_size, 10 + i).astype(np.int32))
+                  for i in range(3)]
+    ref, base = _serve(cfg, mk(), slots=2, max_len=24, paged=True,
+                       page_size=8, num_pages=4)
+    got, sched = _serve(cfg, mk(), slots=2, max_len=24, paged=True,
+                        page_size=8, num_pages=4,
+                        sched_kw={"preempt": True})
+    assert got == ref, arch
+    assert base.stats["deferred_admissions"] > 0    # baseline had to wait
+    assert sched.stats["preemptions"] >= 1
+    assert sched.stats["restores"] == sched.stats["preemptions"]
+
+
+def test_prefix_cache_and_preempt_require_paged():
+    cfg = smoke_variant(get_config("olmo-1b"))
+    eng = InferenceEngine(cfg, slots=2, max_len=16, dtype=jnp.float32)
+    state = eng.init_state(T.init(cfg, jax.random.key(0)))
+    with pytest.raises(ValueError, match="paged"):
+        Scheduler(eng, state, prefix_cache=True)
+    with pytest.raises(ValueError, match="paged"):
+        Scheduler(eng, state, preempt=True)
 
 
 # ---------------------------------------------------------------------------
