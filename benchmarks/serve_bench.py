@@ -36,8 +36,19 @@ The PREFIX-CACHE / PREEMPTION rows are recorded to ``BENCH_PR7.json``
     with defer-only vs page-aware preemption, plus how many admissions
     each policy deferred.  Streams asserted identical.
 
+The MIXED-SAMPLING row is recorded to ``BENCH_PR8.json`` (its own
+baseline so the PR-8 gate evolves independently):
+
+  * ``serve_mixed_sampling`` — one queue served all-greedy, with half
+    the requests sampled (heterogeneous per-request temperature/top-k/
+    top-p/penalty/seed in the same fused batch), and sampled with
+    speculation on: tok/s each way plus ``sampling_overhead_ratio``
+    (mixed/greedy).  Greedy rows asserted bit-identical to the
+    all-greedy leg; speculation asserted stream-lossless under sampling.
+
     python -m benchmarks.serve_bench [--smoke] [--out BENCH_PR3.json] \
-        [--spec-out BENCH_PR5.json] [--pr7-out BENCH_PR7.json]
+        [--spec-out BENCH_PR5.json] [--pr7-out BENCH_PR7.json] \
+        [--pr8-out BENCH_PR8.json]
 
 ``--smoke`` shrinks sizes for CI; the numbers are honest either way (on a
 shared-core CPU container the batching win is modest — the bench exists
@@ -413,6 +424,81 @@ def bench_preemption(*, arch: str, prompt_len: int, gen: int,
                 base["stats"]["max_defer_cycles"]}
 
 
+def bench_mixed_sampling(*, arch: str, slots: int, requests: int,
+                         prompt_len: int, gen: int, spec_k: int,
+                         page_size: int, mesh=None) -> dict:
+    """Mixed greedy/sampled workload (PR 8): the same queue served three
+    ways — all-greedy (the pre-sampling baseline rate), with half the
+    requests sampled (per-request temperature/top-k/top-p/penalty/seed in
+    one fused batch), and sampled + speculative.  ``sampling_overhead``
+    is the mixed/greedy rate ratio (the per-step cost of the vectorized
+    sampler); the spec leg shows speculation surviving sampled slots.
+    Parity asserted: the greedy rows of the mixed leg bit-match the
+    all-greedy leg, and speculation does not change the mixed streams."""
+    from repro.configs import get_config, smoke_variant
+    from repro.models import transformer as tfm
+    from repro.serve import (
+        InferenceEngine, NgramDrafter, Request, SamplingParams, Scheduler,
+    )
+
+    cfg = smoke_variant(get_config(arch))
+    max_len = prompt_len + gen
+    sampled = [SamplingParams(temperature=0.8, top_p=0.9, seed=51),
+               SamplingParams(temperature=1.0, top_k=40, rep_penalty=1.2,
+                              seed=52)]
+
+    def queue(mixed):
+        rng = np.random.default_rng(0)
+        reqs = []
+        for i in range(requests):
+            sp = SamplingParams()
+            if mixed and i % 2:
+                p = sampled[(i // 2) % len(sampled)]
+                sp = SamplingParams(temperature=p.temperature, top_k=p.top_k,
+                                    top_p=p.top_p, rep_penalty=p.rep_penalty,
+                                    seed=p.seed + i)
+            reqs.append(Request(
+                rid=i, max_new=gen, sampling=sp,
+                prompt=rng.integers(0, cfg.vocab_size,
+                                    prompt_len).astype(np.int32)))
+        return reqs
+
+    def leg(mixed, spec_k_):
+        engine = InferenceEngine(cfg, slots=slots, max_len=max_len,
+                                 paged=True, page_size=page_size, mesh=mesh)
+        state = engine.init_state(tfm.init(cfg, jax.random.key(0)))
+        drafter = NgramDrafter() if spec_k_ else None
+        sched = Scheduler(engine, state, spec_k=spec_k_, drafter=drafter)
+        sched.run(queue(mixed))                     # compile warmup
+        best, out = 0.0, None
+        for _ in range(2):                          # best-of-2 (CPU noise)
+            sched = Scheduler(engine, sched.state, spec_k=spec_k_,
+                              drafter=drafter)
+            t0 = time.perf_counter()
+            out = sched.run(queue(mixed))
+            best = max(best, requests * gen / (time.perf_counter() - t0))
+        return best, out
+
+    greedy_rate, greedy_out = leg(False, 0)
+    mixed_rate, mixed_out = leg(True, 0)
+    spec_rate, spec_out = leg(True, spec_k)
+    assert spec_out == mixed_out, "speculation changed sampled streams"
+    for i in range(0, requests, 2):                 # the greedy rows
+        assert mixed_out[i] == greedy_out[i], \
+            "a sampled neighbour perturbed a greedy stream"
+    return {"path": "serve_mixed_sampling", "arch": cfg.name,
+            "slots": slots, "requests": requests, "prompt_len": prompt_len,
+            "gen": gen, "spec_k": spec_k, "page_size": page_size,
+            "paged_attn_path": _paged_attn_path(),
+            "greedy_tok_per_s": round(greedy_rate, 1),
+            "mixed_tok_per_s": round(mixed_rate, 1),
+            "mixed_spec_tok_per_s": round(spec_rate, 1),
+            # mixed/greedy rate quotient: the sampler pipeline's cost on
+            # a half-sampled batch (1.0 = free; gated as a ratio key)
+            "sampling_overhead_ratio": round(
+                mixed_rate / max(greedy_rate, 1e-9), 3)}
+
+
 def bench_forecast(*, watersheds: int, days: int) -> dict:
     from repro.configs import get_config
     from repro.core import domst
@@ -456,6 +542,9 @@ def run(*, smoke: bool = False) -> dict:
                                mesh=mesh),
             bench_preemption(arch="qwen2-1.5b", prompt_len=16, gen=16,
                              page_size=8, requests=4, mesh=mesh)]
+        sampling_rows = [bench_mixed_sampling(
+            arch="qwen2-1.5b", slots=4, requests=8, prompt_len=16, gen=16,
+            spec_k=3, page_size=8, mesh=mesh)]
     else:
         rows = bench_lm(arch="qwen2-1.5b", slots=8, requests=32,
                         prompt_len=32, gen=24, mesh=mesh)
@@ -474,6 +563,9 @@ def run(*, smoke: bool = False) -> dict:
                                mesh=mesh),
             bench_preemption(arch="qwen2-1.5b", prompt_len=32, gen=32,
                              page_size=8, requests=4, mesh=mesh)]
+        sampling_rows = [bench_mixed_sampling(
+            arch="qwen2-1.5b", slots=8, requests=16, prompt_len=32, gen=32,
+            spec_k=4, page_size=8, mesh=mesh)]
     return {"bench": "serve_prefill_decode_batching", "smoke": smoke,
             "backend": jax.default_backend(),
             # device_count = host devices actually visible (CI forces 8 via
@@ -491,7 +583,10 @@ def run(*, smoke: bool = False) -> dict:
             "spec_rows": spec_rows,
             # written to the --pr7-out file (BENCH_PR7.json): prefix-cache
             # TTFT + preemption burst rows, again their own baseline doc
-            "prefix_rows": prefix_rows}
+            "prefix_rows": prefix_rows,
+            # written to the --pr8-out file (BENCH_PR8.json): the mixed
+            # greedy/sampled workload row, its own baseline doc
+            "sampling_rows": sampling_rows}
 
 
 def main() -> None:
@@ -503,11 +598,15 @@ def main() -> None:
     ap.add_argument("--pr7-out", default="BENCH_PR7.json",
                     help="prefix-cache / preemption rows (their own "
                          "baseline)")
+    ap.add_argument("--pr8-out", default="BENCH_PR8.json",
+                    help="mixed greedy/sampled workload row (its own "
+                         "baseline)")
     args = ap.parse_args()
     res = run(smoke=args.smoke)
     spec_rows = res.pop("spec_rows")
     prefix_rows = res.pop("prefix_rows")
-    for r in res["rows"] + spec_rows + prefix_rows:
+    sampling_rows = res.pop("sampling_rows")
+    for r in res["rows"] + spec_rows + prefix_rows + sampling_rows:
         print(json.dumps(r), flush=True)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)
@@ -520,7 +619,12 @@ def main() -> None:
     with open(args.pr7_out, "w") as f:
         json.dump(pr7, f, indent=2)
         f.write("\n")
-    print("wrote", args.out, ",", args.spec_out, "and", args.pr7_out)
+    pr8 = dict(res, bench="serve_sampling", rows=sampling_rows)
+    with open(args.pr8_out, "w") as f:
+        json.dump(pr8, f, indent=2)
+        f.write("\n")
+    print("wrote", args.out, ",", args.spec_out, ",", args.pr7_out,
+          "and", args.pr8_out)
 
 
 if __name__ == "__main__":

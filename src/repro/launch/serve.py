@@ -29,7 +29,12 @@ both running through ``repro/serve/``:
     (params + cache pool + page tables + slot position counters) is
     sharded from the ``distributed/sharding.py`` rule tables, so the same
     script drives the production mesh (decode_32k / long_500k shapes)
-    that the dry-run lowers.
+    that the dry-run lowers.  ``--temperature/--top-k/--top-p/
+    --rep-penalty/--sample-seed`` switch requests from greedy argmax to
+    per-request seeded sampling (heterogeneous configs per request via
+    ``--queue file.json``); sampled streams stay deterministic — and
+    speculation stays lossless — because draw keys fold by absolute
+    stream position (``repro/serve/sampling.py``).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
       --requests 8 --prompt-len 24 --gen 16
@@ -41,6 +46,7 @@ both running through ``repro/serve/``:
 from __future__ import annotations
 
 import argparse
+import hashlib
 import json
 import time
 
@@ -54,8 +60,42 @@ from repro.data.pipeline import make_domst_windows, stacked_test_batch
 from repro.models import transformer as tfm
 from repro.serve import (
     Forecaster, InferenceEngine, ModelDrafter, NgramDrafter, Request,
-    Scheduler,
+    SamplingParams, Scheduler,
 )
+
+
+def _sampling(args, rid: int, over: dict = None) -> SamplingParams:
+    """Per-request sampling config: CLI flags are the defaults, a queue
+    entry may override any field.  Each request folds its rid into the
+    seed so co-batched sampled streams are decorrelated yet the whole
+    run stays reproducible from ``--sample-seed`` alone."""
+    over = over or {}
+    return SamplingParams(
+        temperature=float(over.get("temperature", args.temperature)),
+        top_k=int(over.get("top_k", args.top_k)),
+        top_p=float(over.get("top_p", args.top_p)),
+        rep_penalty=float(over.get("rep_penalty", args.rep_penalty)),
+        seed=int(over.get("seed", args.sample_seed + rid)))
+
+
+def load_queue(cfg, args) -> list:
+    """``--queue file.json``: a JSON list of request dicts.  Each entry
+    needs ``prompt`` (a token-id list) and may set ``max_new`` plus any
+    :class:`SamplingParams` field (``temperature``/``top_k``/``top_p``/
+    ``rep_penalty``/``seed``); unset fields inherit the CLI flags."""
+    with open(args.queue) as f:
+        entries = json.load(f)
+    if not isinstance(entries, list):
+        raise SystemExit(f"--queue {args.queue}: expected a JSON list")
+    reqs = []
+    for i, e in enumerate(entries):
+        if "prompt" not in e:
+            raise SystemExit(f"--queue entry {i}: missing 'prompt'")
+        reqs.append(Request(
+            rid=i, max_new=int(e.get("max_new", args.gen)),
+            prompt=np.asarray(e["prompt"], np.int32),
+            sampling=_sampling(args, i, e)))
+    return reqs
 
 
 def make_requests(cfg, args) -> list:
@@ -64,6 +104,8 @@ def make_requests(cfg, args) -> list:
     ``--shared-prefix N`` makes the first N tokens of every prompt
     identical — the shared-system-prompt traffic shape the prefix cache
     serves (per-request tails stay distinct and random)."""
+    if args.queue:
+        return load_queue(cfg, args)
     rng = np.random.default_rng(args.seed)
     sp = max(0, min(getattr(args, "shared_prefix", 0), args.prompt_len - 1))
     prefix = rng.integers(0, cfg.vocab_size, sp).astype(np.int32)
@@ -80,7 +122,8 @@ def make_requests(cfg, args) -> list:
                             max(1, n - sp)).astype(np.int32)
         reqs.append(Request(
             rid=i, max_new=args.gen, extras=extras,
-            prompt=np.concatenate([prefix, tail]) if sp else tail))
+            prompt=np.concatenate([prefix, tail]) if sp else tail,
+            sampling=_sampling(args, i)))
     return reqs
 
 
@@ -115,8 +158,9 @@ def serve_lm(args) -> dict:
     if not cfg.supports_decode():
         raise SystemExit(f"{cfg.name} is encoder-only; no decode path")
     params = tfm.init(cfg, jax.random.key(args.seed))
-    max_len = args.max_len or (args.prompt_len + args.gen
-                               + (cfg.num_patches or 0))
+    reqs = make_requests(cfg, args)
+    max_len = args.max_len or max(
+        len(r.prompt) + r.max_new + (cfg.num_patches or 0) for r in reqs)
     engine = InferenceEngine(cfg, slots=args.batch_size, max_len=max_len,
                              paged=args.page_size > 0,
                              page_size=args.page_size or 16,
@@ -133,7 +177,6 @@ def serve_lm(args) -> dict:
                       eos_id=args.eos if args.eos >= 0 else None,
                       spec_k=args.spec_k, drafter=drafter,
                       prefix_cache=args.prefix_cache, preempt=args.preempt)
-    reqs = make_requests(cfg, args)
     t0 = time.perf_counter()
     generated = sched.run(reqs)
     wall = time.perf_counter() - t0
@@ -159,6 +202,17 @@ def serve_lm(args) -> dict:
            # (the non-speculative rate); >1 means accepted drafts
            "accepted_tok_per_step": round(
                st["decode_tokens"] / max(st["decode_slot_steps"], 1), 3),
+           "sampled_requests": sum(
+               1 for r in reqs if not r.sampling.greedy),
+           "temperature": args.temperature, "top_k": args.top_k,
+           "top_p": args.top_p, "rep_penalty": args.rep_penalty,
+           "sample_seed": args.sample_seed,
+           # order-independent digest of every emitted stream: two runs of
+           # the same (queue, params, seeds) must print the same digest —
+           # the reproducibility handle the CI smoke greps
+           "stream_digest": hashlib.sha256(json.dumps(
+               {str(k): generated[k] for k in sorted(generated)},
+               sort_keys=True).encode()).hexdigest()[:16],
            "prefix_cache": args.prefix_cache, "preempt": args.preempt,
            "shared_prefix": args.shared_prefix,
            "prefix_hits": st["prefix_hits"],
@@ -260,6 +314,27 @@ def main() -> None:
                     help="make the first N prompt tokens identical across "
                          "the queue (the shared-system-prompt workload "
                          "the prefix cache serves)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax, the "
+                         "default; > 0 samples from the scaled softmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k highest-probability tokens "
+                         "before sampling (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling: keep the smallest probability "
+                         "mass >= p (1.0 = off)")
+    ap.add_argument("--rep-penalty", type=float, default=1.0,
+                    help="divide the logits of already-seen tokens by "
+                         "this factor (1.0 = off)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="base PRNG seed for sampled requests; request i "
+                         "draws with seed sample-seed + i, so one flag "
+                         "reproduces the whole run bit for bit")
+    ap.add_argument("--queue", default="",
+                    help="JSON file with the request queue: a list of "
+                         "{prompt: [ids], max_new?, temperature?, top_k?, "
+                         "top_p?, rep_penalty?, seed?} — per-request "
+                         "overrides of the sampling flags")
     ap.add_argument("--eos", type=int, default=-1,
                     help="token id ending a request early (-1 = off)")
     ap.add_argument("--ragged", action="store_true",

@@ -45,6 +45,7 @@ from repro.distributed.sharding import (
     logical_sharding, make_rules, resolve_pspec, tree_shardings,
 )
 from repro.models import transformer as tfm
+from repro.serve import sampling
 from repro.serve.state import (
     InferenceState, clear_pages, copy_pool_pages, gather_page_rows,
     gather_slot_rows, inference_state_axes, is_axes, new_inference_state,
@@ -207,6 +208,53 @@ class InferenceEngine:
             cache = jax.device_put(cache, self.state_shardings(state).cache)
         return state._replace(cache=cache)
 
+    def _install_sampling(self, state: InferenceState, slot: int,
+                          temp: float, top_k: int, top_p: float, rep: float,
+                          key, presence) -> InferenceState:
+        """Write one slot's sampling rows (host-side policy hook shared by
+        ``set_sampling`` and ``swap_in``), re-placing only what changed."""
+        state = state._replace(
+            sample_temp=state.sample_temp.at[slot].set(float(temp)),
+            sample_top_k=state.sample_top_k.at[slot].set(int(top_k)),
+            sample_top_p=state.sample_top_p.at[slot].set(float(top_p)),
+            sample_rep=state.sample_rep.at[slot].set(float(rep)),
+            sample_key=state.sample_key.at[slot].set(
+                jnp.asarray(key, jnp.uint32)),
+            tok_presence=state.tok_presence.at[slot].set(
+                jnp.asarray(presence, bool)),
+        )
+        if self._explicit:
+            sh = self.state_shardings(state)
+            state = state._replace(
+                sample_temp=jax.device_put(state.sample_temp,
+                                           sh.sample_temp),
+                sample_top_k=jax.device_put(state.sample_top_k,
+                                            sh.sample_top_k),
+                sample_top_p=jax.device_put(state.sample_top_p,
+                                            sh.sample_top_p),
+                sample_rep=jax.device_put(state.sample_rep, sh.sample_rep),
+                sample_key=jax.device_put(state.sample_key, sh.sample_key),
+                tok_presence=jax.device_put(state.tok_presence,
+                                            sh.tok_presence),
+            )
+        return state
+
+    def set_sampling(self, state: InferenceState, slot: int,
+                     params: "sampling.SamplingParams",
+                     context=()) -> InferenceState:
+        """Install a request's :class:`~repro.serve.sampling.SamplingParams`
+        into ``slot``'s per-slot arrays at admission: parameters, the
+        seed-derived base PRNG key, and the repetition-penalty presence
+        row seeded with ``context`` (the full prompt — also on a
+        prefix-cache resume, so the mask never depends on the resume
+        offset).  Host-side policy hook, outside the jitted steps."""
+        params.validate()
+        return self._install_sampling(
+            state, int(slot), params.temperature, params.top_k,
+            params.top_p, params.rep_penalty,
+            sampling.base_key(params.seed),
+            sampling.presence_row(context, self.cfg.padded_vocab()))
+
     def swap_out(self, state: InferenceState, slot: int, pages) -> dict:
         """Page-aware preemption, out half: ``jax.device_get`` of JUST the
         victim's pool rows (every paged KV leaf at ``pages``) plus its
@@ -215,12 +263,24 @@ class InferenceEngine:
         resume state; the pages and the slot can be handed to another
         request immediately."""
         assert self.paged, "swap_out is a paged-mode operation"
+        slot = int(slot)
         return {
             "kv": gather_page_rows(self._cache_axes, state.cache, pages),
-            "rec": gather_slot_rows(self._cache_axes, state.cache,
-                                    int(slot)),
+            "rec": gather_slot_rows(self._cache_axes, state.cache, slot),
             "pos": int(jax.device_get(state.positions[slot])),
             "last_tok": int(jax.device_get(state.last_tok[slot])),
+            # sampling travels in the blob so a restored request keeps
+            # drawing the exact stream it was preempted from (the base
+            # key plus the restored position counter reproduce the folds)
+            "samp": {
+                "temp": float(jax.device_get(state.sample_temp[slot])),
+                "top_k": int(jax.device_get(state.sample_top_k[slot])),
+                "top_p": float(jax.device_get(state.sample_top_p[slot])),
+                "rep": float(jax.device_get(state.sample_rep[slot])),
+                "key": np.asarray(jax.device_get(state.sample_key[slot])),
+                "presence": np.asarray(
+                    jax.device_get(state.tok_presence[slot])),
+            },
         }
 
     def swap_in(self, state: InferenceState, slot: int, pages,
@@ -242,8 +302,12 @@ class InferenceEngine:
             cache = jax.device_put(cache, sh.cache)
             positions = jax.device_put(positions, sh.positions)
             last_tok = jax.device_put(last_tok, sh.last_tok)
-        return state._replace(cache=cache, positions=positions,
-                              last_tok=last_tok)
+        state = state._replace(cache=cache, positions=positions,
+                               last_tok=last_tok)
+        samp = blob["samp"]
+        return self._install_sampling(
+            state, int(slot), samp["temp"], samp["top_k"], samp["top_p"],
+            samp["rep"], samp["key"], samp["presence"])
 
     def release_pages(self, state: InferenceState,
                       slot: int) -> InferenceState:
@@ -296,14 +360,64 @@ class InferenceEngine:
         return out
 
     # -- the steps ---------------------------------------------------------
+    def _sample_args(self, state: InferenceState) -> dict:
+        return dict(keys=state.sample_key, temperature=state.sample_temp,
+                    top_k=state.sample_top_k, top_p=state.sample_top_p,
+                    rep_penalty=state.sample_rep)
+
+    def _sample_one(self, state: InferenceState, logits: jax.Array,
+                    slot: jax.Array, pos) -> jax.Array:
+        """First-token emission for one slot (prefill / final chunk):
+        argmax when the slot is greedy, else a draw at absolute stream
+        position ``pos`` under the slot's own parameters.  No presence
+        fold — the prompt's presence was installed host-side at admission
+        (``set_sampling``) and the emitted token folds in at the step
+        that consumes it."""
+        greedy = jnp.argmax(logits, -1).astype(jnp.int32)       # (1,)
+
+        def _go():
+            toks = sampling.draw(
+                logits, keys=state.sample_key[slot][None],
+                positions=jnp.asarray(pos, jnp.int32)[None],
+                temperature=state.sample_temp[slot][None],
+                top_k=state.sample_top_k[slot][None],
+                top_p=state.sample_top_p[slot][None],
+                rep_penalty=state.sample_rep[slot][None],
+                presence=state.tok_presence[slot][None])
+            return toks
+        return jax.lax.cond(state.sample_temp[slot] > 0, _go,
+                            lambda: greedy)
+
+    def _sample_all(self, state: InferenceState, logits: jax.Array,
+                    positions: jax.Array, active=None):
+        """All-slot emission for the fused decode: (tokens (S,), presence).
+        The single ``lax.cond`` keeps an all-greedy batch bit-identical
+        to (and as cheap as) the bare argmax path; otherwise every slot
+        first folds the input token it just consumed (``last_tok``) into
+        its presence row, then draws with its position-folded key —
+        greedy slots still take the raw argmax."""
+        greedy = jnp.argmax(logits, -1).astype(jnp.int32)       # (S,)
+
+        def _go():
+            S = logits.shape[0]
+            pres = state.tok_presence.at[
+                jnp.arange(S), state.last_tok].set(True)
+            if active is not None:
+                pres = jnp.where(active[:, None], pres, state.tok_presence)
+            toks = sampling.draw(logits, positions=positions, presence=pres,
+                                 **self._sample_args(state))
+            return jnp.where(state.sample_temp > 0, toks, greedy), pres
+        return jax.lax.cond(jnp.any(state.sample_temp > 0), _go,
+                            lambda: (greedy, state.tok_presence))
+
     def _insert_fn(self, state: InferenceState, inputs: Dict[str, jax.Array],
                    slot: jax.Array):
         logits, cache_one = tfm.prefill(state.params, self.cfg, inputs,
                                         max_len=self.max_len,
                                         dtype=self.dtype)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)          # (1,)
         total = inputs["tokens"].shape[1] + (
             inputs["patches"].shape[1] if "patches" in inputs else 0)
+        tok = self._sample_one(state, logits, slot, total)      # (1,)
         if self.paged:
             # same exact-length prefill; the ring cache scatters into the
             # slot's pages instead of a slot row
@@ -324,8 +438,11 @@ class InferenceEngine:
         logits, cache = tfm.prefill_chunk(
             state.params, self.cfg, inputs, state.cache,
             state.page_table[slot], slot, pos_start, dtype=self.dtype)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)          # (1,)
         end = pos_start + inputs["tokens"].shape[1]
+        # only the final chunk's token is kept, and ``end`` is then the
+        # same absolute position a whole-prompt insert would fold — the
+        # draw is invariant under chunking
+        tok = self._sample_one(state, logits, slot, end)        # (1,)
         return state._replace(
             cache=cache,
             positions=state.positions.at[slot].set(end),
@@ -336,51 +453,100 @@ class InferenceEngine:
         logits, cache = tfm.decode_step(
             state.params, self.cfg, {"tokens": state.last_tok[:, None]},
             state.cache, state.positions, dtype=self.dtype)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)          # (slots,)
+        tok, presence = self._sample_all(state, logits,
+                                         state.positions + 1)  # (slots,)
         return state._replace(cache=cache, positions=state.positions + 1,
-                              last_tok=tok), tok
+                              last_tok=tok, tok_presence=presence), tok
 
     def _decode_paged_fn(self, state: InferenceState, active: jax.Array):
         logits, cache = tfm.decode_step_paged(
             state.params, self.cfg, {"tokens": state.last_tok[:, None]},
             state.cache, state.positions, state.page_table, active,
             dtype=self.dtype)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)          # (slots,)
+        tok, presence = self._sample_all(state, logits,
+                                         state.positions + 1, active)
         return state._replace(
             cache=cache,
             positions=state.positions + active.astype(jnp.int32),
             last_tok=jnp.where(active, tok, state.last_tok),
+            tok_presence=presence,
         ), tok
 
     def _verify_fn(self, state: InferenceState, drafts: jax.Array,
                    draft_len: jax.Array, active: jax.Array):
         """One fused speculative step: feed each active slot its last token
         plus ``drafts`` (S, K) proposed tokens, verify in ONE paged forward,
-        and accept the longest greedy-matching prefix.  Losslessness: the
-        emitted tokens are exactly the model's own greedy argmaxes (drafts
-        only decide how many of them one step yields), rejected KV writes
-        are shadowed by the positional mask, and recurrent/SSM state rolls
-        back to the per-step snapshot at the last accepted token."""
+        and accept the longest prefix of drafts matching the model's OWN
+        next tokens — the raw argmax for greedy slots, a position-keyed
+        draw from the (penalized/filtered) target distribution for
+        sampled slots.
+
+        Losslessness: for a greedy slot this is the classic greedy
+        prefix-match.  For a sampled slot it is rejection-sampling
+        verification specialized to a DETERMINISTIC drafter (the draft
+        distribution is a point mass, so ``min(1, p/q)`` acceptance +
+        residual resampling collapses to: draw ``t_i`` from the target at
+        position ``i`` with that position's folded key, accept the draft
+        iff it equals ``t_i``, and emit ``t_i`` either way) — the emitted
+        stream is therefore BIT-IDENTICAL to the non-speculative sampled
+        stream at equal seeds, not merely equal in distribution.  Rejected
+        KV writes are shadowed by the positional mask, and recurrent/SSM
+        state rolls back to the per-step snapshot at the last accepted
+        token."""
         S, K = drafts.shape
         toks = jnp.concatenate([state.last_tok[:, None], drafts], axis=1)
         logits, stacked = tfm.verify_step_paged(
             state.params, self.cfg, {"tokens": toks}, state.cache,
             state.positions, state.page_table, active, dtype=self.dtype)
         greedy = jnp.argmax(logits, -1).astype(jnp.int32)       # (S, K+1)
+        any_sampled = jnp.any(state.sample_temp > 0)
+        ar_s = jnp.arange(S)
+
+        def _sampled_targets():
+            # walk the K+1 positions in order, folding each INPUT token
+            # into presence before drawing its successor — the same
+            # presence/position alignment K+1 successive decode steps
+            # would produce, which is what makes spec == non-spec exact
+            pres = state.tok_presence
+            cols = []
+            for i in range(K + 1):
+                pres = pres.at[ar_s, toks[:, i]].set(True)
+                t = sampling.draw(logits[:, i],
+                                  positions=state.positions + i + 1,
+                                  presence=pres,
+                                  **self._sample_args(state))
+                cols.append(jnp.where(state.sample_temp > 0, t,
+                                      greedy[:, i]))
+            return jnp.stack(cols, axis=1)
+        target = jax.lax.cond(any_sampled, _sampled_targets,
+                              lambda: greedy)                   # (S, K+1)
         ar = jnp.arange(K, dtype=jnp.int32)[None, :]
-        match = (greedy[:, :-1] == drafts) & (ar < draft_len[:, None])
+        match = (target[:, :-1] == drafts) & (ar < draft_len[:, None])
         # accepted drafts = longest matching prefix; emitted = accepted + 1
         # (the model's own next token after the last accepted position)
         n = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
         consumed = jnp.where(active, n + 1, 0).astype(jnp.int32)
         cache = select_verified(self._cache_axes, stacked, state.cache, n,
                                 active)
-        last = jnp.take_along_axis(greedy, n[:, None], axis=1)[:, 0]
+        last = jnp.take_along_axis(target, n[:, None], axis=1)[:, 0]
+
+        def _commit_presence():
+            # fold exactly the inputs this step consumed (j < consumed):
+            # the rejected tail must not poison the repetition mask
+            pres = state.tok_presence
+            for j in range(K + 1):
+                upd = pres.at[ar_s, toks[:, j]].set(True)
+                pres = jnp.where(((j < consumed) & active)[:, None],
+                                 upd, pres)
+            return pres
+        presence = jax.lax.cond(any_sampled, _commit_presence,
+                                lambda: state.tok_presence)
         return state._replace(
             cache=cache,
             positions=state.positions + consumed,
             last_tok=jnp.where(active, last, state.last_tok),
-        ), greedy, consumed
+            tok_presence=presence,
+        ), target, consumed
 
     def _active_sharding(self):
         return NamedSharding(self.mesh, resolve_pspec(
@@ -457,11 +623,12 @@ class InferenceEngine:
         (slots, K) int32 proposed tokens per slot (row ``s`` meaningful up
         to ``draft_len[s]``; the rest is padding whose cache writes are
         shadowed exactly like rejected drafts); ``active`` (slots,) bool as
-        in :meth:`decode`.  Returns (state, emitted (slots, K+1) greedy
+        in :meth:`decode`.  Returns (state, emitted (slots, K+1) target
         tokens, consumed (slots,)): slot ``s`` emitted
-        ``emitted[s, :consumed[s]]`` — its own greedy continuation,
-        bit-identical to ``consumed[s]`` successive :meth:`decode` calls —
-        and advanced its position by ``consumed[s]``.  Jit-cached per K."""
+        ``emitted[s, :consumed[s]]`` — its own continuation under its
+        sampling params (argmax for greedy slots), bit-identical to
+        ``consumed[s]`` successive :meth:`decode` calls — and advanced
+        its position by ``consumed[s]``.  Jit-cached per K."""
         if not self.paged:
             raise ValueError("speculative verification writes draft KV "
                              "through page tables; build the engine with "

@@ -1,0 +1,129 @@
+"""Per-request sampling over the fused serving steps.
+
+Every decode/verify site in the engine used to be a bare ``jnp.argmax``.
+This module supplies the two halves that replace it:
+
+  * :class:`SamplingParams` — the host-side, per-request config
+    (temperature / top-k / top-p / repetition-penalty / seed) the
+    scheduler carries on each :class:`~repro.serve.scheduler.Request`
+    and installs into the engine's per-slot arrays at admission;
+  * :func:`draw` — the vectorized per-slot sampler the fused steps call:
+    one (S, V) logits batch in, one (S,) token batch out, every slot
+    applying ITS OWN parameters (heterogeneous configs coexist in one
+    continuous batch).
+
+DETERMINISM is the design center.  Each request owns a base PRNG key
+derived from its seed alone, and the key used for the token at absolute
+stream position ``p`` (position = the token's index in the slot's
+combined patches+prompt+generated stream) is ``fold_in(base, p)`` — a
+pure function of (seed, position), never of step count, batch
+composition, slot id, chunking, or speculation depth.  Chunked prefill,
+preemption swap-in (the position counter travels in the swap blob) and
+prefix-cache resume therefore reproduce the exact draws of an
+uninterrupted run, and the sampling-parity suite in
+``tests/test_serve_sampling.py`` pins it.
+
+``temperature <= 0`` means GREEDY: the slot takes the raw-logits argmax
+(bit-identical to the pre-sampling serve path — the baseline every
+existing parity test pins) and all other parameters are ignored.  The
+whole sampling pipeline is further gated behind a single
+``lax.cond(any(temperature > 0), ...)`` so an all-greedy batch never
+pays the sort/softmax/categorical work.
+
+The repetition penalty follows the HF convention (divide positive
+logits by the penalty, multiply negative ones) over a per-slot boolean
+PRESENCE row: token ids that appeared in the slot's context so far.
+Prompt presence is written host-side at admission
+(``engine.set_sampling``); each fused step folds the tokens it CONSUMES
+as input into presence before sampling, so the mask always covers
+exactly the tokens at stream positions below the one being drawn.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration.
+
+    ``temperature <= 0`` selects the greedy path (raw-logits argmax,
+    bit-identical to the pre-sampling engine); every other field is then
+    ignored.  ``top_k == 0`` disables top-k; ``top_p == 1.0`` disables
+    nucleus filtering; ``rep_penalty == 1.0`` disables the repetition
+    penalty.  ``seed`` alone determines the request's draws."""
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    rep_penalty: float = 1.0
+    seed: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+    def validate(self) -> None:
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.rep_penalty <= 0.0:
+            raise ValueError(
+                f"rep_penalty must be > 0, got {self.rep_penalty}")
+
+
+def base_key(seed: int) -> np.ndarray:
+    """The raw uint32 key data a request's seed expands to — what the
+    engine stores in the per-slot ``sample_key`` row."""
+    return np.asarray(jax.random.PRNGKey(int(seed)), np.uint32)
+
+
+def presence_row(context, vocab: int) -> np.ndarray:
+    """Boolean (vocab,) presence of ``context``'s token ids — the initial
+    repetition-penalty mask a request's prompt installs at admission."""
+    row = np.zeros((vocab,), bool)
+    ids = np.asarray(context, np.int64).ravel()
+    row[ids[(ids >= 0) & (ids < vocab)]] = True
+    return row
+
+
+def draw(logits: jax.Array, *, keys: jax.Array, positions: jax.Array,
+         temperature: jax.Array, top_k: jax.Array, top_p: jax.Array,
+         rep_penalty: jax.Array, presence: jax.Array) -> jax.Array:
+    """Sample one token per slot from ``logits`` (S, V), each slot under
+    its own parameters, with the position-folded per-slot key.
+
+    The pipeline (f32 throughout): repetition penalty over ``presence``,
+    temperature scale, top-k cut, top-p (nucleus) cut over the surviving
+    distribution, then a Gumbel categorical with
+    ``fold_in(keys[s], positions[s])``.  Ties at the top-k/top-p
+    threshold keep every tied token (deterministic, never fewer than the
+    requested k / mass).  Callers gate on ``temperature > 0`` — this
+    function itself always samples."""
+    l = logits.astype(jnp.float32)
+    V = l.shape[-1]
+    pen = rep_penalty.astype(jnp.float32)[:, None]
+    l = jnp.where(presence & (pen != 1.0),
+                  jnp.where(l > 0, l / pen, l * pen), l)
+    l = l / jnp.maximum(temperature.astype(jnp.float32), 1e-6)[:, None]
+    # one descending sort serves both cuts
+    sorted_l = jnp.sort(l, axis=-1)[:, ::-1]
+    k = jnp.clip(jnp.where(top_k > 0, top_k, V), 1, V).astype(jnp.int32)
+    kth = jnp.take_along_axis(sorted_l, (k - 1)[:, None], axis=-1)
+    l = jnp.where(l < kth, -jnp.inf, l)
+    sorted_l = jnp.where(sorted_l < kth, -jnp.inf, sorted_l)
+    probs = jax.nn.softmax(sorted_l, axis=-1)
+    csum = jnp.cumsum(probs, axis=-1)
+    # a sorted token survives when the mass BEFORE it is still short of
+    # top_p: the kept set is the smallest prefix reaching the target
+    keep = (csum - probs) < top_p.astype(jnp.float32)[:, None]
+    nkeep = jnp.maximum(jnp.sum(keep, axis=-1), 1).astype(jnp.int32)
+    thr = jnp.take_along_axis(sorted_l, (nkeep - 1)[:, None], axis=-1)
+    l = jnp.where(l < thr, -jnp.inf, l)
+    folded = jax.vmap(jax.random.fold_in)(keys,
+                                          positions.astype(jnp.uint32))
+    return jax.vmap(jax.random.categorical)(folded, l).astype(jnp.int32)

@@ -46,17 +46,26 @@ SPECULATIVE DECODING (``spec_k > 0``, paged engines): instead of one
 token per fused step, each active slot asks a :class:`~repro.serve.
 speculative.Drafter` for up to ``spec_k`` guessed next tokens and the
 engine checks every guess in ONE ``verify`` forward, accepting the
-longest greedy-matching prefix (plus the model's own next token).  The
-serve path is greedy end to end, so speculation is lossless — emitted
-streams are bit-identical to the ``spec_k == 0`` baseline; acceptance
-only changes how many tokens a step yields (``stats["spec_*"]``).
+longest prefix matching the model's own next tokens (plus the model's
+next token itself).  Speculation is lossless for greedy AND sampled
+slots — emitted streams are bit-identical to the ``spec_k == 0``
+baseline (see ``engine._verify_fn``); acceptance only changes how many
+tokens a step yields (``stats["spec_*"]``).
+
+SAMPLING (``Request.sampling``): each request carries a
+:class:`~repro.serve.sampling.SamplingParams`; admission installs it
+into the engine's per-slot arrays (``engine.set_sampling``) so
+heterogeneous configs — greedy and sampled — coexist in one fused
+batch.  Draw keys fold by absolute stream position, so sampled streams
+keep the same determinism contract as greedy ones.
 
 Each slot's computation is independent of its neighbours (attention,
-recurrent state and MoE routing are all per-row), so a request's greedy
-output is a function of its prompt alone: deterministic under any
-arrival order, slot assignment, co-batched traffic, prefill chunking,
-or speculation depth — the property ``tests/test_serve.py`` and
-``tests/test_serve_speculative.py`` pin.
+recurrent state and MoE routing are all per-row), so a request's
+output is a function of (prompt, sampling params, seed) alone:
+deterministic under any arrival order, slot assignment, co-batched
+traffic, prefill chunking, preemption, or speculation depth — the
+property ``tests/test_serve.py``, ``tests/test_serve_speculative.py``
+and ``tests/test_serve_sampling.py`` pin.
 
 ``stats`` counts ONE call to :meth:`Scheduler.run`: it resets when a run
 starts (a second batch is never polluted by the first's throughput or
@@ -72,6 +81,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.serve.engine import InferenceEngine
+from repro.serve.sampling import SamplingParams
 from repro.serve.state import InferenceState
 
 
@@ -92,6 +102,12 @@ class PagePool:
         self._owned: Dict[int, List[int]] = {}
 
     def available(self) -> int:
+        return len(self._free)
+
+    def reclaimable(self, keep: Sequence[int] = ()) -> int:
+        """Pages an admission needing ``keep`` could claim right now.
+        Without refcounts every non-owned page is free, so this is just
+        the free list; :class:`RadixPagePool` refines it."""
         return len(self._free)
 
     def pages_in_tables(self) -> int:
@@ -185,13 +201,16 @@ class RadixPagePool(PagePool):
     def refcount(self, page: int) -> int:
         return self._ref.get(page, 0)
 
+    def reclaimable(self, keep: Sequence[int] = ()) -> int:
+        """Free pages plus cached (ref-0) pages OUTSIDE ``keep`` — what an
+        admission that wants to map the ``keep`` run can actually claim."""
+        ks = set(keep)
+        return len(self._free) + sum(1 for p in self._cached if p not in ks)
+
     def can_admit(self, shared: Sequence[int], n_fresh: int) -> bool:
         """True when ``n_fresh`` pages can be claimed without reclaiming
         any of the ``shared`` pages the same admission wants to map."""
-        keep = set(shared)
-        reclaimable = len(self._free) + sum(
-            1 for p in self._cached if p not in keep)
-        return n_fresh <= reclaimable
+        return n_fresh <= self.reclaimable(shared)
 
     # -- the prefix walk ---------------------------------------------------
     def match(self, prompt) -> Tuple[List[int], int]:
@@ -369,6 +388,8 @@ class Request:
     extras: Dict[str, np.ndarray] = field(default_factory=dict)  # e.g. patches
     generated: List[int] = field(default_factory=list)
     slot: Optional[int] = None              # last slot served in (telemetry)
+    #: per-request sampling config; the default is the greedy path
+    sampling: SamplingParams = field(default_factory=SamplingParams)
 
 
 @dataclass
@@ -454,6 +475,15 @@ class Scheduler:
         self._defer_counts: Dict[int, int] = {}
         self._admit_seq: Dict[int, int] = {}   # slot -> admission sequence
         self._seq = 0
+        #: global admission/restore completion order for the current run
+        #: (rid per event; a preempted rid appears once per restore) —
+        #: what the fairness regression tests assert on
+        self.admission_order: List[int] = []
+        # slots whose per-slot sampling rows were left non-greedy: a later
+        # greedy admission must reset them, while greedy-into-greedy slot
+        # reuse skips the host round-trip entirely (the default rows are
+        # already greedy)
+        self._sampled_slots: set = set()
 
     @staticmethod
     def _fresh_stats() -> Dict[str, float]:
@@ -504,6 +534,10 @@ class Scheduler:
         return -(-self._total_len(r) // self.engine.page_size)
 
     def _validate(self, r: Request) -> None:
+        try:
+            r.sampling.validate()
+        except ValueError as e:
+            raise ValueError(f"request {r.rid}: {e}") from None
         if r.max_new < 1:
             # the prefill itself emits the first greedy token, so a budget
             # below one token is unservable rather than silently exceeded
@@ -554,10 +588,33 @@ class Scheduler:
             if self.engine.has_recurrent_state else None
         return _AdmitPlan(total, list(shared), resume, cow_idx, snap_key)
 
-    def _fits(self, plan: _AdmitPlan) -> bool:
+    def _fits(self, plan: _AdmitPlan, reserve: int = 0) -> bool:
+        """Can ``plan`` be claimed while leaving ``reserve`` pages
+        untouched?  ``reserve`` is the parked restore head's page need —
+        pending admissions must not starve it out of the headroom it is
+        owed (see the restore phase in :meth:`_run`)."""
         if isinstance(self._pages, RadixPagePool):
-            return self._pages.can_admit(plan.shared, plan.fresh_needed)
-        return self._pages.available() >= plan.total
+            return self._pages.can_admit(plan.shared,
+                                         plan.fresh_needed + reserve)
+        return self._pages.available() >= plan.total + reserve
+
+    def _preempt_gain(self, active: Dict[int, "Request"],
+                      plan: _AdmitPlan) -> int:
+        """Pages that preempting EVERY active slot would actually return
+        to the claimable set.  Under the prefix cache a page only leaves
+        the in-use state when its refcount drops to 0, so pages shared
+        with a non-preemptable owner (a mid-chunk admission, or the
+        plan's own shared run) must not be counted — the old bound
+        ``sum(len(table(s)))`` overcounted exactly those, letting the
+        scheduler swap out every victim and still defer (a preemption
+        storm with zero admission progress)."""
+        tables = [self._pages.table(s) for s in active]
+        if not isinstance(self._pages, RadixPagePool):
+            return sum(len(t) for t in tables)
+        refs = Counter(p for t in tables for p in t)
+        keep = set(plan.shared)
+        return sum(1 for p, c in refs.items()
+                   if p not in keep and self._pages.refcount(p) == c)
 
     def _claim_pages(self, r: Request, slot: int, plan: _AdmitPlan) -> None:
         """Execute ``plan``: map shared + fresh pages into ``slot``'s page
@@ -587,6 +644,22 @@ class Scheduler:
         if plan.snap_key is not None:
             self.state = self.engine.set_slot_state(
                 self.state, slot, self._pages.snapshot(plan.snap_key))
+
+    def _set_sampling(self, r: Request, slot: int) -> None:
+        """Install ``r``'s sampling config into ``slot`` before its first
+        prefill.  Greedy requests entering a slot that is still greedy
+        skip the host-side write — the engine's default rows already
+        encode the argmax path, which keeps pure-greedy serving on
+        exactly the pre-sampling admission sequence."""
+        sp = r.sampling
+        if sp.greedy and slot not in self._sampled_slots:
+            return
+        self.state = self.engine.set_sampling(self.state, slot, sp,
+                                              np.asarray(r.prompt, np.int32))
+        if sp.greedy:
+            self._sampled_slots.discard(slot)
+        else:
+            self._sampled_slots.add(slot)
 
     def _defer(self, r: Request) -> None:
         self.stats["deferred_admissions"] += 1
@@ -655,6 +728,7 @@ class Scheduler:
         r.generated.append(first)
         r.slot = slot
         self.slot_history[slot].append(r.rid)
+        self.admission_order.append(r.rid)
         self._note_first(r)
 
     def _prefill_one_chunk(self, adm: _Admission) -> bool:
@@ -685,9 +759,10 @@ class Scheduler:
                 self.engine.get_slot_state(self.state, adm.slot)
         if adm.cursor < len(prompt):
             return False
-        r.generated.append(first)           # final chunk's greedy token
+        r.generated.append(first)           # final chunk's emitted token
         r.slot = adm.slot
         self.slot_history[adm.slot].append(r.rid)
+        self.admission_order.append(r.rid)
         self._note_first(r)
         if self.prefix_cache and "patches" not in r.extras:
             self._pages.register(adm.slot, prompt,
@@ -744,6 +819,7 @@ class Scheduler:
         self._defer_counts = {}
         self._admit_seq = {}
         self._seq = 0
+        self.admission_order = []
         try:
             return self._run(requests)
         finally:
@@ -767,9 +843,11 @@ class Scheduler:
             # taken to absorb a burst — they are owed the next headroom);
             # a restore claims all-fresh pages and never preempts, so a
             # preempt/restore pair can never livelock
-            while swapped and free:
+            while swapped:
                 sw = swapped[0]
-                if self._pages.available() < sw.n_pages:
+                if not free or self._pages.available() < sw.n_pages:
+                    # the head keeps waiting — record the cycle so the
+                    # wait shows up in deferred_admissions either way
                     self._defer(sw.r)
                     break
                 swapped.popleft()
@@ -777,12 +855,22 @@ class Scheduler:
                 pages = self._pages.alloc(slot, sw.n_pages)
                 self.state = self.engine.swap_in(self.state, slot, pages,
                                                  sw.blob)
+                if sw.r.sampling.greedy:
+                    self._sampled_slots.discard(slot)
+                else:
+                    self._sampled_slots.add(slot)
                 self._admit_seq[slot] = self._next_seq()
                 sw.r.slot = slot
                 self.slot_history[slot].append(sw.r.rid)
+                self.admission_order.append(sw.r.rid)
                 active[slot] = sw.r
                 self.stats["restores"] += 1
                 progressed = True
+            # pages the parked restore head is owed: pending admissions
+            # below must fit WITHOUT them, or the very pages the head
+            # waits for get claimed out from under it cycle after cycle
+            # (a small-request flood would starve a large restore forever)
+            reserve = swapped[0].n_pages if swapped else 0
             # admit pending requests into free slots (claiming pages first
             # in paged mode — a short free list defers admission until an
             # eviction returns pages, unless preemption can take them from
@@ -790,14 +878,15 @@ class Scheduler:
             while pending and free:
                 r = pending[0]
                 plan = self._plan(r) if self.engine.paged else None
-                if self.engine.paged and not self._fits(plan):
+                if self.engine.paged and not self._fits(plan, reserve):
                     while self.preempt and active and \
-                            not self._fits(plan) and plan.fresh_needed <= \
-                            self._pages.available() + sum(
-                                len(self._pages.table(s)) for s in active):
+                            not self._fits(plan, reserve) and \
+                            plan.fresh_needed + reserve <= \
+                            self._pages.reclaimable(plan.shared) + \
+                            self._preempt_gain(active, plan):
                         self._preempt_one(active, free, swapped)
                         progressed = True
-                    if not self._fits(plan):
+                    if not self._fits(plan, reserve):
                         self._defer(r)
                         break
                 pending.popleft()
@@ -805,6 +894,7 @@ class Scheduler:
                 self._admit_seq[slot] = self._next_seq()
                 if self.engine.paged:
                     self._claim_pages(r, slot, plan)
+                self._set_sampling(r, slot)
                 resume = plan.resume if plan is not None else 0
                 capture = self.prefix_cache \
                     and self.engine.has_recurrent_state \

@@ -144,6 +144,7 @@ class ModelDrafter:
             params = tfm.init(cfg, jax.random.key(seed))
         self.state = self.engine.init_state(params)
         self._pos: Dict[int, int] = {}  # slot -> committed tokens consumed
+        self._ctx: Dict[int, np.ndarray] = {}  # slot -> committed prefix
 
     # -- hand-off constructors --------------------------------------------
     @classmethod
@@ -175,9 +176,19 @@ class ModelDrafter:
     def _catch_up(self, slot: int, ctx: np.ndarray) -> int:
         """Teacher-force the confirmed tokens this slot's committed state
         has not consumed yet (bounded chunks keep jit shapes few); the
-        final chunk's greedy argmax is the first proposal."""
+        final chunk's greedy argmax is the first proposal.
+
+        Slot reuse detection cannot rely on lengths alone: a recycled
+        slot whose NEW request's context is already longer than the old
+        committed position would silently teacher-force the new tail
+        onto the old request's committed KV.  The committed prefix
+        itself is the fingerprint — any mismatch (missed ``release``,
+        drafter shared across schedulers) re-assigns the slot and
+        replays from scratch."""
         start = self._pos.get(slot)
-        if start is None or start > len(ctx) - 1:
+        committed = self._ctx.get(slot)
+        if start is None or start > len(ctx) - 1 or committed is None \
+                or not np.array_equal(committed, ctx[:start]):
             self._assign(slot)          # fresh request in a recycled slot
             start = 0
         tok = None
@@ -188,6 +199,7 @@ class ModelDrafter:
                 slot, start)
             start += len(c)
         self._pos[slot] = len(ctx)
+        self._ctx[slot] = np.array(ctx, np.int32, copy=True)
         return int(np.asarray(tok)[0])
 
     def propose(self, wants: Wants) -> Dict[int, np.ndarray]:
@@ -217,3 +229,4 @@ class ModelDrafter:
 
     def release(self, slot: int) -> None:
         self._pos.pop(slot, None)
+        self._ctx.pop(slot, None)

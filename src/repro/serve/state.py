@@ -41,6 +41,35 @@ class InferenceState(NamedTuple):
     positions: jax.Array  # (S,) int32: next write index per slot
     last_tok: jax.Array   # (S,) int32: last accepted/emitted token per slot
     page_table: Any = None  # paged mode: (S, pages_per_slot) int32, -1 free
+    # per-slot sampling config (serve/sampling.py): temperature <= 0 is the
+    # greedy path; sample_key holds raw uint32 PRNG key data folded by
+    # absolute stream position; tok_presence is the repetition-penalty
+    # context mask over the (padded) vocab
+    sample_temp: Any = None   # (S,) f32
+    sample_top_k: Any = None  # (S,) int32, 0 = off
+    sample_top_p: Any = None  # (S,) f32, 1.0 = off
+    sample_rep: Any = None    # (S,) f32 repetition penalty, 1.0 = off
+    sample_key: Any = None    # (S, 2) uint32 raw threefry key data
+    tok_presence: Any = None  # (S, padded_vocab) bool
+
+
+def _sampling_leaves(slots: int, vocab: int) -> dict:
+    """Fresh (all-greedy) per-slot sampling arrays."""
+    return dict(
+        sample_temp=jnp.zeros((slots,), jnp.float32),
+        sample_top_k=jnp.zeros((slots,), jnp.int32),
+        sample_top_p=jnp.ones((slots,), jnp.float32),
+        sample_rep=jnp.ones((slots,), jnp.float32),
+        sample_key=jnp.zeros((slots, 2), jnp.uint32),
+        tok_presence=jnp.zeros((slots, vocab), bool),
+    )
+
+
+_SAMPLING_AXES = dict(
+    sample_temp=("batch",), sample_top_k=("batch",),
+    sample_top_p=("batch",), sample_rep=("batch",),
+    sample_key=("batch", None), tok_presence=("batch", None),
+)
 
 
 def inference_state_axes(cfg: ModelConfig) -> InferenceState:
@@ -55,6 +84,7 @@ def inference_state_axes(cfg: ModelConfig) -> InferenceState:
         cache=tfm.cache_axes(cfg),
         positions=("batch",),
         last_tok=("batch",),
+        **_SAMPLING_AXES,
     )
 
 
@@ -66,6 +96,7 @@ def new_inference_state(params: Any, cfg: ModelConfig, *, slots: int,
         cache=tfm.init_cache(cfg, slots, max_len, dtype=dtype),
         positions=jnp.zeros((slots,), jnp.int32),
         last_tok=jnp.zeros((slots,), jnp.int32),
+        **_sampling_leaves(slots, cfg.padded_vocab()),
     )
 
 
@@ -79,6 +110,7 @@ def paged_inference_state_axes(cfg: ModelConfig) -> InferenceState:
         positions=("batch",),
         last_tok=("batch",),
         page_table=("batch", None),
+        **_SAMPLING_AXES,
     )
 
 
@@ -94,6 +126,7 @@ def new_paged_inference_state(params: Any, cfg: ModelConfig, *, slots: int,
         positions=jnp.zeros((slots,), jnp.int32),
         last_tok=jnp.zeros((slots,), jnp.int32),
         page_table=jnp.full((slots, pages_per_slot), -1, jnp.int32),
+        **_sampling_leaves(slots, cfg.padded_vocab()),
     )
 
 

@@ -308,6 +308,75 @@ def test_preemption_matches_deferred_run(arch):
     assert sched.stats["restores"] == sched.stats["preemptions"]
 
 
+def test_restore_head_not_starved_by_small_request_flood():
+    """Fairness regression: a preempted large request parked on the
+    restore queue must not wait behind an unbounded stream of small
+    admissions.  The scheduler reserves the restore head's page need, so
+    once enough pages free up the restore goes FIRST — pre-fix, every
+    small admission grabbed the pages the head was waiting for and the
+    large request restored dead last."""
+    cfg = smoke_variant(get_config("olmo-1b"))
+    rng = np.random.default_rng(9)
+    big = lambda: Request(rid=0, max_new=12, prompt=rng.integers(
+        0, cfg.vocab_size, 12).astype(np.int32))       # 24 tokens = 6 pages
+    smalls = lambda: [Request(
+        rid=i, max_new=4 + i % 2, prompt=rng.integers(
+            0, cfg.vocab_size, 4 - i % 2).astype(np.int32))
+        for i in range(1, 7)]                          # 2 pages each
+    rng = np.random.default_rng(9)
+    ref, _ = _serve(cfg, [big()] + smalls(), slots=2, max_len=24,
+                    paged=True, page_size=4, num_pages=12)  # no pressure
+    rng = np.random.default_rng(9)
+    got, sched = _serve(cfg, [big()] + smalls(), slots=2, max_len=24,
+                        paged=True, page_size=4, num_pages=6,
+                        sched_kw={"preempt": True})
+    assert got == ref                                  # still lossless
+    assert sched.stats["preemptions"] >= 1             # big was swapped out
+    order = sched.admission_order
+    # the big request's FIRST restore must beat the later smalls into a
+    # slot: pre-fix it trailed the whole flood ([0, 1..6, 0])
+    assert order.index(0, 1) < order.index(3), order
+    # the head's wait is visible, not silent
+    assert sched.stats["deferred_admissions"] > 0
+
+
+def test_preempt_gain_ignores_pages_pinned_by_shared_owners():
+    """Preemption-accounting regression: feasibility must count only
+    pages whose refcount actually drops to 0 when their active owners
+    are swapped out.  Pre-fix the bound summed victim page tables, so
+    pages shared with a mid-admission slot (pinned, non-preemptable)
+    were double-counted and the scheduler preempted a victim, freed
+    almost nothing, and deferred anyway — a wasted swap."""
+    cfg = smoke_variant(get_config("qwen2-1.5b"))
+    rng = np.random.default_rng(11)
+    base = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+    mk = lambda: [
+        # B: registers its 4 prompt pages, then decodes (5 pages)
+        Request(rid=0, max_new=4, prompt=base.copy()),
+        # A: shares B's full prompt, resumes at 16 -> chunked admission
+        # that PINS the 4 shared pages while not yet active (7 pages)
+        Request(rid=1, max_new=4, prompt=np.concatenate(
+            [base, rng.integers(0, cfg.vocab_size, 8).astype(np.int32)])),
+        # C: distinct prompt, needs 3 fresh pages the pool can't supply
+        Request(rid=2, max_new=4, prompt=rng.integers(
+            0, cfg.vocab_size, 8).astype(np.int32))]
+    rng = np.random.default_rng(11)
+    base = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+    ref, _ = _serve(cfg, mk(), slots=3, max_len=28, paged=True,
+                    page_size=4, num_pages=9,
+                    sched_kw={"prefix_cache": True})
+    rng = np.random.default_rng(11)
+    base = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+    got, sched = _serve(cfg, mk(), slots=3, max_len=28, paged=True,
+                        page_size=4, num_pages=9,
+                        sched_kw={"prefix_cache": True, "preempt": True})
+    assert got == ref
+    # pre-fix: TWO preemptions (a wasted no-op swap of B while A pinned
+    # B's shared pages, then the real one); post-fix only the real one
+    assert sched.stats["preemptions"] == 1, sched.stats
+    assert sched.stats["restores"] == 1
+
+
 def test_prefix_cache_and_preempt_require_paged():
     cfg = smoke_variant(get_config("olmo-1b"))
     eng = InferenceEngine(cfg, slots=2, max_len=16, dtype=jnp.float32)

@@ -239,6 +239,31 @@ def test_spec_requires_paged_engine():
         Scheduler(eng, state, spec_k=SPEC_K)
 
 
+def test_model_drafter_survives_missed_release():
+    """Stale-context regression: a recycled slot whose NEW request's
+    context is already LONGER than the old committed position slipped
+    past the length-only reuse check — the drafter teacher-forced the
+    new tail onto the old request's committed KV and proposed garbage.
+    The committed-prefix fingerprint catches the mismatch and re-assigns;
+    proposals must match a fresh drafter's even when ``release`` was
+    never called."""
+    cfg = smoke_variant(get_config("olmo-1b"))
+    params = T.init(cfg, jax.random.key(0))
+    mk = lambda: ModelDrafter(cfg, params=params, slots=1, max_len=32,
+                              page_size=4, dtype=jnp.float32)
+    rng = np.random.default_rng(13)
+    ctx_a = rng.integers(0, cfg.vocab_size, 10).astype(np.int32)
+    # ctx_b shares ctx_a's first token but is otherwise new — and LONGER
+    # than ctx_a, so a length-only heuristic sees a plausible catch-up
+    ctx_b = np.concatenate(
+        [ctx_a[:1], rng.integers(0, cfg.vocab_size, 11).astype(np.int32)])
+    stale = mk()
+    stale.propose({0: (ctx_a, 3)})              # request 1 occupies slot 0
+    got = stale.propose({0: (ctx_b, 3)})        # request 2, NO release()
+    want = mk().propose({0: (ctx_b, 3)})
+    assert got[0].tolist() == want[0].tolist()
+
+
 def test_ngram_drafter_proposes_continuation_of_repeats():
     d = NgramDrafter(max_ngram=3)
     ctx = np.asarray([5, 6, 7, 9, 5, 6, 7], np.int32)
