@@ -31,6 +31,14 @@ gate survives bench evolution:
     less than 40% of its baseline still fails, scheduler jitter does not.
 
 Exit status 1 iff any compared key regresses.
+
+``--write-baseline`` flips the tool from gate to refresh: each pair's
+committed baseline file is REWRITTEN from its fresh result, preserving
+the baseline's top-level key order (a refresh produces a reviewable
+diff, not a reshuffle) and refusing when the fresh run's environment
+(``smoke`` / ``device_count`` / ``mesh_shape``) differs from the
+committed one — a laptop run must never silently become the CI
+baseline.  Workflow in ``benchmarks/README.md``.
 """
 from __future__ import annotations
 
@@ -121,6 +129,33 @@ def compare_files(base_path: str, fresh_path: str, tolerance: float,
     return regressions
 
 
+def write_baseline(base_path: str, fresh_path: str, out=sys.stdout) -> None:
+    """Rewrite the committed ``base_path`` from ``fresh_path``.
+
+    The fresh document's values win wholesale, but the COMMITTED file's
+    top-level key order is preserved (fresh-only keys append at the end)
+    so a refresh reads as a value diff in review.  Refuses when the two
+    documents disagree on the environment triple — a baseline regenerated
+    on the wrong mesh would silently loosen (or jam) the gate."""
+    with open(base_path) as f:
+        base = json.load(f)
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    for k in ("smoke", "device_count", "mesh_shape"):
+        if k in base and k in fresh and base[k] != fresh[k]:
+            raise SystemExit(
+                f"refusing to rewrite {base_path}: fresh run's '{k}' is "
+                f"{fresh[k]!r} but the committed baseline recorded "
+                f"{base[k]!r} — regenerate from a matching environment")
+    merged = {k: fresh[k] for k in base if k in fresh}
+    merged.update({k: v for k, v in fresh.items() if k not in merged})
+    with open(base_path, "w") as f:
+        json.dump(merged, f, indent=2)
+        f.write("\n")
+    print(f"  {base_path}: baseline rewritten from {fresh_path} "
+          f"({len(merged.get('rows', []))} rows)", file=out)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("pairs", nargs="+",
@@ -131,7 +166,19 @@ def main(argv=None) -> int:
     ap.add_argument("--ratio-tolerance", type=float, default=0.6,
                     help="wider floor for dimensionless ratio keys, which "
                          "are quotients of two noisy timings")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite each committed baseline from its fresh "
+                         "result (key order preserved; refuses on "
+                         "smoke/device_count/mesh_shape mismatch) instead "
+                         "of gating")
     args = ap.parse_args(argv)
+    if args.write_baseline:
+        for pair in args.pairs:
+            base_path, _, fresh_path = pair.partition("=")
+            if not fresh_path:
+                ap.error(f"pair '{pair}' is not of the form baseline=fresh")
+            write_baseline(base_path, fresh_path)
+        return 0
     all_regressions = []
     for pair in args.pairs:
         base_path, _, fresh_path = pair.partition("=")

@@ -46,9 +46,19 @@ baseline so the PR-8 gate evolves independently):
     (mixed/greedy).  Greedy rows asserted bit-identical to the
     all-greedy leg; speculation asserted stream-lossless under sampling.
 
+The HOST-TIER row is recorded to ``BENCH_PR9.json`` (its own baseline so
+the PR-9 gate evolves independently):
+
+  * ``serve_host_tier_sweep`` — a forced-spill queue (alternating
+    shared-prefix families on a pool that fits one request) swept over
+    host-cache byte budgets, 0 included: %% of prompt prefill skipped,
+    host hit/restore/spill counts and warm TTFT per size, plus
+    ``host_ttft_speedup`` (no-host / largest budget — the gated ratio).
+    Streams asserted bit-identical across every size.
+
     python -m benchmarks.serve_bench [--smoke] [--out BENCH_PR3.json] \
         [--spec-out BENCH_PR5.json] [--pr7-out BENCH_PR7.json] \
-        [--pr8-out BENCH_PR8.json]
+        [--pr8-out BENCH_PR8.json] [--pr9-out BENCH_PR9.json]
 
 ``--smoke`` shrinks sizes for CI; the numbers are honest either way (on a
 shared-core CPU container the batching win is modest — the bench exists
@@ -499,6 +509,85 @@ def bench_mixed_sampling(*, arch: str, slots: int, requests: int,
                 mixed_rate / max(greedy_rate, 1e-9), 3)}
 
 
+def bench_host_tier(*, arch: str, prefix_len: int, tail_len: int, gen: int,
+                    page_size: int, families: int, rounds: int,
+                    host_mbs, mesh=None) -> dict:
+    """Cache-size-vs-hit-rate sweep (PR 9): a forced-spill queue —
+    ``families`` alternating shared-prefix families served one slot at a
+    time on a pool that only fits ONE request, so every admission
+    reclaims the previous family's cached pages — swept over host-tier
+    byte budgets (0 = the device-only PR 7 behaviour).  With no host
+    tier the radix cache contributes nothing here (every page is gone by
+    the time its family returns); with one, the evicted pages spill and
+    the family's next request swaps them back in.  Streams are asserted
+    bit-identical across every size — the sweep buys latency, never
+    different tokens.  ``host_ttft_speedup`` (warm TTFT, no-host /
+    largest-budget) is the ratio the regression gate watches."""
+    from repro.configs import get_config, smoke_variant
+    from repro.models import transformer as tfm
+    from repro.serve import InferenceEngine, Request, Scheduler
+
+    cfg = smoke_variant(get_config(arch))
+    prompt_len = prefix_len + tail_len
+    max_len = prompt_len + gen
+    num_pages = -(-max_len // page_size)        # exactly one resident req
+    prefixes = [np.random.default_rng(i).integers(
+        0, cfg.vocab_size, prefix_len).astype(np.int32)
+        for i in range(families)]
+
+    def mk(rid):
+        tail = np.random.default_rng(500 + rid).integers(
+            0, cfg.vocab_size, tail_len).astype(np.int32)
+        return Request(rid=rid, max_new=gen, prompt=np.concatenate(
+            [prefixes[rid % families], tail]))
+
+    def leg(host_mb):
+        engine = InferenceEngine(cfg, slots=1, max_len=max_len, paged=True,
+                                 page_size=page_size, num_pages=num_pages,
+                                 mesh=mesh)
+        state = engine.init_state(tfm.init(cfg, jax.random.key(0)))
+        sched = Scheduler(engine, state, prefix_cache=True,
+                          host_cache_bytes=int(host_mb * 2 ** 20))
+        streams, ttfts = {}, []
+        for rid in range(families * rounds):
+            streams[rid] = sched.run([mk(rid)])[rid]
+            ttfts.append(sched.ttft[rid])
+        # warm TTFT over the LAST round only: round 1 is cold by
+        # construction and round 2 pays the resume path's compiles
+        warm = float(np.mean(ttfts[(rounds - 1) * families:]))
+        st = sched.lifetime_stats
+        total_prompt = families * rounds * prompt_len
+        return streams, warm, {
+            "skipped_pct": round(
+                100.0 * st["prefix_hit_tokens"] / total_prompt, 1),
+            "host_hits": int(st["host_hits"]),
+            "host_restored_pages": int(st["host_restored_pages"]),
+            "host_spilled_pages": int(st["host_spilled_pages"])}
+
+    legs = [(mb,) + leg(mb) for mb in host_mbs]
+    base_streams = legs[0][1]
+    for mb, streams, _, _ in legs[1:]:
+        assert streams == base_streams, \
+            f"host tier at {mb} MiB changed the streams"
+    assert legs[0][3]["host_hits"] == 0                 # no tier, no hits
+    assert legs[-1][3]["host_hits"] > 0, legs[-1][3]    # ample tier hits
+    row = {"path": "serve_host_tier_sweep", "arch": cfg.name,
+           "families": families, "rounds": rounds,
+           "prompt_len": prompt_len, "shared_prefix": prefix_len,
+           "gen": gen, "page_size": page_size, "num_pages": num_pages,
+           "paged_attn_path": _paged_attn_path(),
+           "host_cache_mbs": list(host_mbs)}
+    for mb, _, warm, st in legs:
+        label = str(mb).replace(".", "p")
+        row[f"skipped_pct_host_{label}mb"] = st["skipped_pct"]
+        row[f"host_hits_{label}mb"] = st["host_hits"]
+        row[f"host_restored_pages_{label}mb"] = st["host_restored_pages"]
+        row[f"host_spilled_pages_{label}mb"] = st["host_spilled_pages"]
+        row[f"warm_ttft_host_{label}mb_s"] = round(warm, 4)
+    row["host_ttft_speedup"] = round(legs[0][2] / max(legs[-1][2], 1e-9), 3)
+    return row
+
+
 def bench_forecast(*, watersheds: int, days: int) -> dict:
     from repro.configs import get_config
     from repro.core import domst
@@ -545,6 +634,10 @@ def run(*, smoke: bool = False) -> dict:
         sampling_rows = [bench_mixed_sampling(
             arch="qwen2-1.5b", slots=4, requests=8, prompt_len=16, gen=16,
             spec_k=3, page_size=8, mesh=mesh)]
+        host_rows = [bench_host_tier(
+            arch="qwen2-1.5b", prefix_len=16, tail_len=8, gen=8,
+            page_size=8, families=2, rounds=3,
+            host_mbs=(0.0, 0.01, 8.0), mesh=mesh)]
     else:
         rows = bench_lm(arch="qwen2-1.5b", slots=8, requests=32,
                         prompt_len=32, gen=24, mesh=mesh)
@@ -566,6 +659,10 @@ def run(*, smoke: bool = False) -> dict:
         sampling_rows = [bench_mixed_sampling(
             arch="qwen2-1.5b", slots=8, requests=16, prompt_len=32, gen=32,
             spec_k=4, page_size=8, mesh=mesh)]
+        host_rows = [bench_host_tier(
+            arch="qwen2-1.5b", prefix_len=32, tail_len=16, gen=16,
+            page_size=8, families=2, rounds=4,
+            host_mbs=(0.0, 0.02, 64.0), mesh=mesh)]
     return {"bench": "serve_prefill_decode_batching", "smoke": smoke,
             "backend": jax.default_backend(),
             # device_count = host devices actually visible (CI forces 8 via
@@ -586,7 +683,10 @@ def run(*, smoke: bool = False) -> dict:
             "prefix_rows": prefix_rows,
             # written to the --pr8-out file (BENCH_PR8.json): the mixed
             # greedy/sampled workload row, its own baseline doc
-            "sampling_rows": sampling_rows}
+            "sampling_rows": sampling_rows,
+            # written to the --pr9-out file (BENCH_PR9.json): the host-tier
+            # cache-size-vs-hit-rate sweep row, its own baseline doc
+            "host_rows": host_rows}
 
 
 def main() -> None:
@@ -601,12 +701,17 @@ def main() -> None:
     ap.add_argument("--pr8-out", default="BENCH_PR8.json",
                     help="mixed greedy/sampled workload row (its own "
                          "baseline)")
+    ap.add_argument("--pr9-out", default="BENCH_PR9.json",
+                    help="host-tier cache-size sweep row (its own "
+                         "baseline)")
     args = ap.parse_args()
     res = run(smoke=args.smoke)
     spec_rows = res.pop("spec_rows")
     prefix_rows = res.pop("prefix_rows")
     sampling_rows = res.pop("sampling_rows")
-    for r in res["rows"] + spec_rows + prefix_rows + sampling_rows:
+    host_rows = res.pop("host_rows")
+    for r in res["rows"] + spec_rows + prefix_rows + sampling_rows \
+            + host_rows:
         print(json.dumps(r), flush=True)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)
@@ -623,8 +728,12 @@ def main() -> None:
     with open(args.pr8_out, "w") as f:
         json.dump(pr8, f, indent=2)
         f.write("\n")
-    print("wrote", args.out, ",", args.spec_out, ",", args.pr7_out,
-          "and", args.pr8_out)
+    pr9 = dict(res, bench="serve_host_tier", rows=host_rows)
+    with open(args.pr9_out, "w") as f:
+        json.dump(pr9, f, indent=2)
+        f.write("\n")
+    print("wrote", args.out, ",", args.spec_out, ",", args.pr7_out, ",",
+          args.pr8_out, "and", args.pr9_out)
 
 
 if __name__ == "__main__":

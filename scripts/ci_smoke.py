@@ -1,0 +1,152 @@
+"""Serve-CLI smoke checks — the single entry point CI and local runs share.
+
+Each subcommand drives ``repro.launch.serve`` end to end (subprocess, real
+CLI) and asserts the same reproducibility bar the PR acceptance criteria
+pin.  The exact commands CI runs work locally:
+
+  export XLA_FLAGS=--xla_force_host_platform_device_count=8
+  PYTHONPATH=src python scripts/ci_smoke.py prefix
+  PYTHONPATH=src python scripts/ci_smoke.py sampling
+  PYTHONPATH=src python scripts/ci_smoke.py host-tier
+
+Subcommands:
+
+* ``prefix``    — the same shared-prefix queue served plain and with
+                  ``--prefix-cache --preempt`` must emit bit-identical
+                  streams, and the cached run must actually skip prefill
+                  work (``prefix_hit_tokens > 0``).
+* ``sampling``  — a sampled queue served with speculation on must be
+                  reproducible (two invocations at the same
+                  ``--sample-seed`` print the same stream digest) and
+                  must actually sample (every request non-greedy).
+* ``host-tier`` — a FORCED-SPILL queue (two alternating prefix families
+                  on a pool sized below either family, so each admission
+                  evicts the other family's cached pages) served with and
+                  without ``--host-cache-mb`` must emit bit-identical
+                  streams; the host-tier run must record
+                  ``prefix_hit_tokens > 0`` and ``prefill_skipped_pct >
+                  0`` where the no-host-tier run records 0 — the spilled
+                  pages were genuinely swapped back in, not re-prefilled.
+
+No inline Python lives in ``ci.yml``; this file IS the smoke suite.  It is
+also the format-gated exemplar: ``ruff format --check scripts/`` runs in
+the lint job, so keep this file formatter-clean.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+
+
+def run_serve(extra, base=None):
+    """Run the serve CLI; return (parsed JSON doc, ``req N: ...`` lines)."""
+    cmd = [sys.executable, "-m", "repro.launch.serve"] + (base or []) + extra
+    out = subprocess.run(cmd, check=True, capture_output=True, text=True).stdout
+    lines = out.strip().splitlines()
+    doc = json.loads([ln for ln in lines if ln.startswith("{")][0])
+    streams = [ln for ln in lines if ln.startswith("req ")]
+    return doc, streams
+
+
+def smoke_prefix(args) -> None:
+    base = ["--arch", args.arch, "--smoke", "--requests", "4"]
+    base += ["--batch-size", "2", "--prompt-len", "24", "--gen", "8"]
+    base += ["--page-size", "8", "--shared-prefix", "18"]
+    plain_doc, plain_streams = run_serve([], base)
+    cache_doc, cache_streams = run_serve(["--prefix-cache", "--preempt"], base)
+    assert cache_streams == plain_streams, (plain_streams, cache_streams)
+    assert cache_doc["prefix_hit_tokens"] > 0, cache_doc
+    keys = "prefix_hits prefix_hit_tokens prefix_hit_rate cow_pages".split()
+    keys += ["preemptions", "restores"]
+    print("prefix-cache parity ok:", {k: cache_doc[k] for k in keys})
+
+
+def smoke_sampling(args) -> None:
+    base = ["--arch", args.arch, "--smoke", "--requests", "4"]
+    base += ["--batch-size", "2", "--prompt-len", "12", "--gen", "8", "--ragged"]
+    base += ["--temperature", "0.8", "--top-p", "0.9"]
+    base += ["--spec-k", "4", "--sample-seed", "7"]
+
+    def digest():
+        doc, _ = run_serve([], base)
+        assert doc["sampled_requests"] == 4, doc
+        return doc["stream_digest"]
+
+    a, b = digest(), digest()
+    assert a == b, (a, b)
+    print("sampled serve reproducible, digest", a)
+
+
+def write_spill_queue(path, families=2, per_family=2, prefix_len=16, tail_len=8):
+    """An alternating multi-family queue: request i uses family i %
+    ``families``.  Served one slot at a time on a pool that only fits one
+    request, each admission reclaims the previous family's cached pages —
+    with a host tier those pages SPILL and the family's next request
+    restores them; without one the cache contributes nothing."""
+    rng = np.random.default_rng(0)
+    prefixes = [rng.integers(0, 512, prefix_len).tolist() for _ in range(families)]
+    entries = []
+    for i in range(families * per_family):
+        tail = rng.integers(0, 512, tail_len).tolist()
+        entries.append({"prompt": prefixes[i % families] + tail})
+    with open(path, "w") as f:
+        json.dump(entries, f)
+
+
+def smoke_host_tier(args) -> None:
+    fd, qpath = tempfile.mkstemp(suffix=".json", prefix="ci_spill_queue_")
+    os.close(fd)
+    try:
+        write_spill_queue(qpath)
+        # prompt 24 @ page 8 + gen 8 -> 4 pages/request == the whole pool:
+        # every admission must reclaim the previous request's cached pages
+        base = ["--arch", args.arch, "--smoke", "--batch-size", "1"]
+        base += ["--gen", "8", "--page-size", "8", "--num-pages", "4"]
+        base += ["--queue", qpath, "--prefix-cache"]
+        cold_doc, cold_streams = run_serve([], base)
+        mb = str(args.host_cache_mb)
+        host_doc, host_streams = run_serve(["--host-cache-mb", mb], base)
+        assert host_streams == cold_streams, (cold_streams, host_streams)
+        assert host_doc["stream_digest"] == cold_doc["stream_digest"]
+        # without a host tier the forced-spill queue cannot hit at all
+        assert cold_doc["prefix_hit_tokens"] == 0, cold_doc
+        assert cold_doc["prefill_skipped_pct"] == 0, cold_doc
+        # with one, the spilled prefix pages come back as real hits
+        assert host_doc["prefix_hit_tokens"] > 0, host_doc
+        assert host_doc["prefill_skipped_pct"] > 0, host_doc
+        assert host_doc["host_hits"] > 0, host_doc
+        assert host_doc["host_spilled_pages"] > 0, host_doc
+        keys = "prefix_hit_tokens prefill_skipped_pct host_hits".split()
+        keys += ["host_hit_tokens", "host_restored_pages", "host_spilled_pages"]
+        print("host-tier parity ok:", {k: host_doc[k] for k in keys})
+    finally:
+        os.unlink(qpath)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen2-1.5b", help="arch for every smoke")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    sub.add_parser("prefix", help="prefix-cache + preemption CLI parity")
+    sub.add_parser("sampling", help="sampled serve reproducibility")
+    ht = sub.add_parser("host-tier", help="forced-spill host-tier CLI parity")
+    ht.add_argument("--host-cache-mb", type=float, default=64.0)
+    args = ap.parse_args(argv)
+    cmds = {
+        "prefix": smoke_prefix,
+        "sampling": smoke_sampling,
+        "host-tier": smoke_host_tier,
+    }
+    cmds[args.cmd](args)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

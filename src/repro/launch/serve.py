@@ -46,7 +46,6 @@ both running through ``repro/serve/``:
 from __future__ import annotations
 
 import argparse
-import hashlib
 import json
 import time
 
@@ -60,7 +59,7 @@ from repro.data.pipeline import make_domst_windows, stacked_test_batch
 from repro.models import transformer as tfm
 from repro.serve import (
     Forecaster, InferenceEngine, ModelDrafter, NgramDrafter, Request,
-    SamplingParams, Scheduler,
+    SamplingParams, Scheduler, stream_digest,
 )
 
 
@@ -173,10 +172,14 @@ def serve_lm(args) -> dict:
     if (args.prefix_cache or args.preempt) and not engine.paged:
         raise SystemExit("--prefix-cache/--preempt are page-pool policies; "
                          "they require the paged cache (--page-size > 0)")
+    if args.host_cache_mb and not args.prefix_cache:
+        raise SystemExit("--host-cache-mb is a spill tier FOR the prefix "
+                         "cache; it requires --prefix-cache")
     sched = Scheduler(engine, state,
                       eos_id=args.eos if args.eos >= 0 else None,
                       spec_k=args.spec_k, drafter=drafter,
-                      prefix_cache=args.prefix_cache, preempt=args.preempt)
+                      prefix_cache=args.prefix_cache, preempt=args.preempt,
+                      host_cache_bytes=int(args.host_cache_mb * 2 ** 20))
     t0 = time.perf_counter()
     generated = sched.run(reqs)
     wall = time.perf_counter() - t0
@@ -210,9 +213,7 @@ def serve_lm(args) -> dict:
            # order-independent digest of every emitted stream: two runs of
            # the same (queue, params, seeds) must print the same digest —
            # the reproducibility handle the CI smoke greps
-           "stream_digest": hashlib.sha256(json.dumps(
-               {str(k): generated[k] for k in sorted(generated)},
-               sort_keys=True).encode()).hexdigest()[:16],
+           "stream_digest": stream_digest(generated),
            "prefix_cache": args.prefix_cache, "preempt": args.preempt,
            "shared_prefix": args.shared_prefix,
            "prefix_hits": st["prefix_hits"],
@@ -222,6 +223,18 @@ def serve_lm(args) -> dict:
            "prefix_hit_rate": round(
                st["prefix_hit_tokens"] / max(
                    st["prefix_hit_tokens"] + st["prefill_tokens"], 1), 3),
+           # prompt prefill skipped outright, over the queue's total
+           # prompt tokens — the acceptance handle for the host tier
+           # (a forced-spill queue reads 0 here without it)
+           "prefill_skipped_pct": round(
+               100.0 * st["prefix_hit_tokens"]
+               / max(sum(len(r.prompt) for r in reqs), 1), 2),
+           "host_cache_mb": args.host_cache_mb,
+           "host_hits": st["host_hits"],
+           "host_hit_tokens": st["host_hit_tokens"],
+           "host_restored_pages": st["host_restored_pages"],
+           "host_spilled_pages": st["host_spilled_pages"],
+           "host_evicted_pages": st["host_evicted_pages"],
            "cow_pages": st["cow_pages"],
            "preemptions": st["preemptions"], "restores": st["restores"],
            "deferred_admissions": st["deferred_admissions"],
@@ -305,6 +318,12 @@ def main() -> None:
                          "by refcount bump and resume prefill at the "
                          "divergence point (requires the paged cache). "
                          "Greedy streams are bit-identical either way.")
+    ap.add_argument("--host-cache-mb", type=float, default=0.0,
+                    help="host-memory spill tier for the prefix cache, in "
+                         "MiB (0 = off): cached pages evicted under pool "
+                         "pressure spill to host RAM and later matches "
+                         "swap them back in instead of re-prefilling "
+                         "(requires --prefix-cache)")
     ap.add_argument("--preempt", action="store_true",
                     help="page-aware preemption: on page exhaustion swap "
                          "the most recently admitted slot's pages to host "

@@ -1,6 +1,6 @@
 from repro.serve.engine import InferenceEngine  # noqa: F401
 from repro.serve.forecast import Forecaster  # noqa: F401
-from repro.serve.sampling import SamplingParams  # noqa: F401
+from repro.serve.sampling import SamplingParams, stream_digest  # noqa: F401
 from repro.serve.scheduler import (  # noqa: F401
     PagePool, RadixPagePool, Request, Scheduler,
 )

@@ -47,10 +47,11 @@ from repro.distributed.sharding import (
 from repro.models import transformer as tfm
 from repro.serve import sampling
 from repro.serve.state import (
-    InferenceState, clear_pages, copy_pool_pages, gather_page_rows,
-    gather_slot_rows, inference_state_axes, is_axes, new_inference_state,
-    new_paged_inference_state, paged_inference_state_axes,
-    scatter_page_rows, scatter_slot, scatter_slot_rows, select_verified,
+    InferenceState, clear_pages, concat_page_rows, copy_pool_pages,
+    gather_page_rows, gather_slot_rows, inference_state_axes, is_axes,
+    new_inference_state, new_paged_inference_state,
+    paged_inference_state_axes, scatter_page_rows, scatter_slot,
+    scatter_slot_rows, select_verified,
 )
 
 
@@ -308,6 +309,32 @@ class InferenceEngine:
         return self._install_sampling(
             state, int(slot), samp["temp"], samp["top_k"], samp["top_p"],
             samp["rep"], samp["key"], samp["presence"])
+
+    def spill_page(self, state: InferenceState, page: int) -> list:
+        """Host copy of ONE pool page across every paged KV leaf — what
+        the radix cache's host tier stores when ``_reclaim`` evicts a
+        cached (ref-0) page under pool pressure.  Leaf-aligned like
+        ``gather_page_rows`` (``None`` on slot-major leaves); the pos
+        leaf travels in the blob, so the content stays keyed by absolute
+        stream positions, never by the physical page id."""
+        assert self.paged, "spill_page is a paged-mode operation"
+        return gather_page_rows(self._cache_axes, state.cache, [int(page)])
+
+    def restore_pages(self, state: InferenceState, pages,
+                      blobs: list) -> InferenceState:
+        """Scatter per-page spill blobs (one :meth:`spill_page` blob per
+        entry of ``pages``, in order) back into freshly-claimed pool
+        pages — the restore half of a host-tier prefix hit: the KV those
+        pages held returns by a host-to-device copy instead of prefill
+        compute.  The physical ids may differ from the spill-time ones;
+        page contents are keyed by the absolute positions in the pos
+        leaf, exactly like a preemption ``swap_in``."""
+        assert self.paged, "restore_pages is a paged-mode operation"
+        rows = concat_page_rows(self._cache_axes, blobs)
+        cache = scatter_page_rows(self._cache_axes, state.cache, pages, rows)
+        if self._explicit:
+            cache = jax.device_put(cache, self.state_shardings(state).cache)
+        return state._replace(cache=cache)
 
     def release_pages(self, state: InferenceState,
                       slot: int) -> InferenceState:

@@ -40,6 +40,8 @@ exactly the tokens at stream positions below the one being drawn.
 """
 from __future__ import annotations
 
+import hashlib
+import json
 from dataclasses import dataclass
 
 import jax
@@ -89,6 +91,23 @@ def presence_row(context, vocab: int) -> np.ndarray:
     ids = np.asarray(context, np.int64).ravel()
     row[ids[(ids >= 0) & (ids < vocab)]] = True
     return row
+
+
+def stream_digest(generated) -> str:
+    """Order-independent 16-hex digest of a {rid: [token, ...]} result.
+
+    The reproducibility handle the CLI prints and the CI smokes compare:
+    two runs of the same (queue, params, seeds) must produce the same
+    digest regardless of arrival order, slot assignment, chunking,
+    preemption, speculation depth — and, with the two-tier prefix cache,
+    regardless of WHERE each prompt's prefix was served from.  Draw keys
+    fold by absolute stream position and a restored page carries its pos
+    metadata inside the spill blob, so a cold prefill, a device-tier
+    hit and a host-tier restore all reproduce bit-identical draws; the
+    digest is the single value that pins it end to end."""
+    return hashlib.sha256(json.dumps(
+        {str(k): [int(t) for t in generated[k]] for k in sorted(generated)},
+        sort_keys=True).encode()).hexdigest()[:16]
 
 
 def draw(logits: jax.Array, *, keys: jax.Array, positions: jax.Array,

@@ -33,6 +33,28 @@ logits).  Recurrent/SSM state is slot-major — not in pages — so on
 hybrid archs the cache also stores a host-side recurrent snapshot per
 registered page boundary and the resume offset is capped to boundaries
 with a snapshot; replay genuinely starts at the divergence point.
+Registration is INCREMENTAL: a chunked prefill registers each page the
+moment its last token lands, so concurrent admissions match pages a
+live slot still owns (refcount bump, CoW on divergence) — the cache
+covers in-flight work, not only finished requests.
+
+HOST TIER (``host_cache_bytes > 0``): the radix cache becomes two-tier.
+When ``_reclaim`` would discard a cached (ref == 0) page, its KV rows —
+and, on hybrid archs, the boundary's recurrent snapshot — are
+``device_get`` into a byte-budgeted host-memory map under the same
+page-granular prefix key.  A later admission extends its device-tier
+match through ``host_match`` and each spilled page swaps back in by one
+host-to-device scatter (``engine.restore_pages``) instead of
+re-prefilling; the key moves back to the device tier in the same
+transaction, so a prefix key lives in EXACTLY one tier at all times.
+Eviction at both tiers is COST-AWARE, not LRU: victims are the keys
+with the fewest admission-time hits (``_hits``, folded into
+``lifetime_stats`` via the ``prefix_hits``/spill/restore counters),
+oldest first on ties — pages are uniform size, so fewest-hits IS
+lowest bytes-saved-per-hit.  When a matched run makes a plan
+unfittable on a tight pool, admission degrades it page by page (host
+tail first) down to a cold plan rather than deadlocking on a hit it
+cannot afford.
 
 PAGE-AWARE PREEMPTION (``preempt=True``): when admission would defer on
 page exhaustion, the scheduler swaps out a victim slot — most recently
@@ -151,7 +173,8 @@ class PagePool:
 
 
 class RadixPagePool(PagePool):
-    """Refcounted radix/prefix cache over the physical page pool.
+    """Refcounted radix/prefix cache over the physical page pool, with an
+    optional host-memory spill tier.
 
     Every page is in exactly one of three states:
 
@@ -162,7 +185,7 @@ class RadixPagePool(PagePool):
       * CACHED      — refcount 0 but REGISTERED in the radix trie: its KV
                       content backs a token-prefix key and can be mapped
                       by a future admission (refcount bump, zero prefill).
-                      Cached pages are reclaimed LRU-first when the free
+                      Cached pages are reclaimed on demand when the free
                       list runs short, unregistering their keys.
 
     The trie is host-side and page-granular: key = the full token prefix
@@ -170,22 +193,68 @@ class RadixPagePool(PagePool):
     KV.  ``match`` walks a prompt boundary by boundary; ``admit`` maps the
     matched run plus fresh tail pages into a slot in one transaction, with
     copy-on-write replacing any shared page the slot must write into.
-    ``register`` inserts a finished prefill's full prompt pages (plus
-    optional per-boundary recurrent snapshots for hybrid archs).
+    ``register`` inserts a prefill's completed prompt pages (plus optional
+    per-boundary recurrent snapshots for hybrid archs) — incrementally at
+    each chunk, so pages owned by a still-prefilling live slot are already
+    matchable by concurrent admissions.
+
+    THE HOST TIER (``host_bytes > 0``): a reclaimed cached page is no
+    longer simply lost — ``_reclaim`` first spills its KV content (and
+    its recurrent snapshot, when one is registered) into a host-memory
+    dict keyed by the same prefix tuple, via the ``spill_fn`` the
+    scheduler installs.  ``host_match`` continues a prompt's prefix walk
+    past the device trie into the spilled keys, and ``admit`` swaps a
+    matched host entry back into a freshly-claimed page (the scheduler
+    scatters the blob — ``engine.restore_pages`` — the same mechanics as
+    a preemption ``swap_in``), re-registering the key device-side.  A
+    prefix key therefore lives in EXACTLY ONE tier at a time: spilled ∪
+    device-registered keys are disjoint, and a spill/restore round trip
+    conserves the cached bytes it moves.
+
+    EVICTION is cost-aware at both tiers, replacing plain LRU: every
+    admit that maps a key (device bump or host restore) increments the
+    key's hit counter, and the victim is the key with the FEWEST hits,
+    oldest first among ties — bytes-saved-per-hit collapses to the hit
+    count because every page holds the same ``page_size`` tokens of KV.
+    The counters live on the pool (they survive ``Scheduler.run``
+    boundaries, like ``lifetime_stats``); the per-run spill/restore
+    totals drain into the scheduler's stats via ``drain_events``.
 
     PR 5's conservation invariant generalizes: free + cached + in-use
     partition the pool exactly, and the sum of refcounts equals the total
     page-table occupancy (``pages_in_tables``) — re-checked after every
-    operation and driven by the hypothesis test in ``test_property.py``."""
+    operation and driven by the hypothesis test in ``test_property.py``,
+    which also pins the two-tier key disjointness and the host byte
+    budget."""
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int, *,
+                 host_bytes: int = 0):
         super().__init__(num_pages)
         self.page_size = int(page_size)
         self._ref: Dict[int, int] = {}              # page -> #owning slots
         self._trie: Dict[Tuple[int, ...], int] = {}  # prefix key -> page
         self._key: Dict[int, Tuple[int, ...]] = {}   # page -> its key
-        self._cached: "OrderedDict[int, None]" = OrderedDict()  # LRU
+        self._cached: "OrderedDict[int, None]" = OrderedDict()  # recency
         self._snaps: Dict[Tuple[int, ...], Any] = {}  # key -> rec snapshot
+        #: host spill tier: prefix key -> {"kv": blob, "snap": ..,
+        #: "nbytes": int}, in recency order; capped at ``host_bytes``
+        self.host_bytes = int(host_bytes)
+        self._host: "OrderedDict[Tuple[int, ...], Dict[str, Any]]" = \
+            OrderedDict()
+        self._host_used = 0
+        self._spill_fn = None       # page -> kv blob (engine.spill_page)
+        #: per-key hit counters — the cost-aware eviction signal at BOTH
+        #: tiers; lifetime by construction (never reset between runs)
+        self._hits: Dict[Tuple[int, ...], int] = {}
+        #: per-run spill/evict totals the scheduler drains into its stats
+        self._events: Dict[str, int] = {"host_spilled_pages": 0,
+                                        "host_evicted_pages": 0}
+
+    def set_spill_fn(self, fn) -> None:
+        """Install the page-content gather the spill path calls (the
+        scheduler binds ``engine.spill_page`` over its live state); the
+        host tier stays inert without one even when ``host_bytes > 0``."""
+        self._spill_fn = fn
 
     # -- accounting --------------------------------------------------------
     def available(self) -> int:
@@ -197,6 +266,31 @@ class RadixPagePool(PagePool):
 
     def in_use_pages(self) -> set:
         return set(self._ref)
+
+    def host_pages(self) -> int:
+        """Spilled prefix pages currently held in the host tier."""
+        return len(self._host)
+
+    def host_used_bytes(self) -> int:
+        return self._host_used
+
+    def spilled_keys(self) -> set:
+        """The prefix keys the host tier currently backs (always disjoint
+        from the device trie's keys — a key lives in exactly one tier)."""
+        return set(self._host)
+
+    def hit_count(self, key: Tuple[int, ...]) -> int:
+        """Lifetime admit-time hits on ``key`` — the cost-aware eviction
+        signal (a key that keeps saving prefill outlives colder ones)."""
+        return self._hits.get(key, 0)
+
+    def drain_events(self) -> Dict[str, int]:
+        """Return and reset the spill/evict counters accumulated since
+        the last drain — folded into the scheduler's per-run stats."""
+        out = dict(self._events)
+        for k in self._events:
+            self._events[k] = 0
+        return out
 
     def refcount(self, page: int) -> int:
         return self._ref.get(page, 0)
@@ -229,6 +323,22 @@ class RadixPagePool(PagePool):
                 self._cached.move_to_end(p)
         return pages, len(pages) * ps
 
+    def host_match(self, prompt, start_pages: int) -> List[Tuple[int, ...]]:
+        """Host-tier continuation of a device ``match``: the prefix keys
+        for page boundaries ``start_pages``, ``start_pages + 1``, ... as
+        long as the host tier holds them.  Touches recency so a hot
+        spilled prefix outlives colder ones under the byte budget."""
+        ps = self.page_size
+        prompt = [int(t) for t in np.asarray(prompt).ravel()]
+        keys: List[Tuple[int, ...]] = []
+        for i in range(int(start_pages), len(prompt) // ps):
+            key = tuple(prompt[:(i + 1) * ps])
+            if key not in self._host:
+                break
+            keys.append(key)
+            self._host.move_to_end(key)
+        return keys
+
     def snapshot(self, key: Tuple[int, ...]):
         """The recurrent-state snapshot registered at prefix ``key``."""
         return self._snaps[key]
@@ -237,18 +347,74 @@ class RadixPagePool(PagePool):
         return key in self._snaps
 
     # -- transactions ------------------------------------------------------
+    def _pick_victim(self) -> int:
+        """Cost-aware device-tier eviction: the cached page whose key has
+        saved the least prefill (fewest admit-time hits), oldest first
+        among ties — bytes-saved-per-hit reduces to the hit count since
+        every page holds the same ``page_size`` tokens of KV."""
+        victim, vh = None, None
+        for p in self._cached:              # insertion order: oldest first
+            h = self._hits.get(self._key[p], 0)
+            if vh is None or h < vh:
+                victim, vh = p, h
+                if h == 0:                  # cannot score lower
+                    break
+        return victim
+
+    def _host_evict_one(self) -> None:
+        """Cost-aware host-tier eviction under the byte budget: fewest
+        hits first, oldest first among ties (same rule as the device
+        tier — the two tiers share one hit-counter table)."""
+        victim, vh = None, None
+        for k in self._host:                # insertion order: oldest first
+            h = self._hits.get(k, 0)
+            if vh is None or h < vh:
+                victim, vh = k, h
+                if h == 0:
+                    break
+        self._host_used -= self._host.pop(victim)["nbytes"]
+        self._events["host_evicted_pages"] += 1
+
+    def _host_insert(self, key: Tuple[int, ...], kv: list, snap) -> None:
+        """Spill one evicted page's content into the host tier, evicting
+        colder entries until the byte budget holds (an entry larger than
+        the whole budget is simply dropped)."""
+        nbytes = sum(int(r.nbytes) for r in kv if r is not None)
+        if snap is not None:
+            nbytes += sum(int(r.nbytes) for r in snap if r is not None)
+        if nbytes > self.host_bytes:
+            return
+        while self._host_used + nbytes > self.host_bytes:
+            self._host_evict_one()
+        self._host[key] = {"kv": kv, "snap": snap, "nbytes": nbytes}
+        self._host_used += nbytes
+        self._events["host_spilled_pages"] += 1
+
+    def _drop_host(self, key: Tuple[int, ...]) -> None:
+        """Remove ``key``'s host entry (a device registration supersedes
+        it — the two tiers must stay disjoint)."""
+        ent = self._host.pop(key, None)
+        if ent is not None:
+            self._host_used -= ent["nbytes"]
+            self._events["host_evicted_pages"] += 1
+
     def _reclaim(self, n: int) -> None:
         """Grow the free list to ``n`` pages by evicting cached (ref-0)
-        pages LRU-first, unregistering their keys and snapshots."""
+        pages fewest-hits-first, unregistering their keys and snapshots —
+        spilling each victim's KV content (and snapshot) into the host
+        tier first when one is configured."""
         while len(self._free) < n:
             if not self._cached:
                 raise ValueError(f"want {n} free pages, only "
                                  f"{len(self._free)} free and nothing "
                                  f"cached to reclaim (defer admission)")
-            p, _ = self._cached.popitem(last=False)
+            p = self._pick_victim()
+            del self._cached[p]
             key = self._key.pop(p)
             del self._trie[key]
-            self._snaps.pop(key, None)
+            snap = self._snaps.pop(key, None)
+            if self.host_bytes and self._spill_fn is not None:
+                self._host_insert(key, self._spill_fn(p), snap)
             self._free.append(p)
 
     def alloc(self, slot: int, n: int) -> List[int]:
@@ -272,16 +438,36 @@ class RadixPagePool(PagePool):
         return pages
 
     def admit(self, slot: int, shared: Sequence[int], n_tail: int,
-              cow_idx: Sequence[int] = ()) -> List[Tuple[int, int]]:
-        """Map ``shared`` (refcount bump each) followed by ``n_tail``
-        fresh pages into ``slot``'s table, copy-on-writing the shared
-        pages at indices ``cow_idx`` (the ones the slot must write into).
-        Returns the (src, dst) CoW pairs so the scheduler can clone their
-        KV content; the slot's table is ``self.table(slot)`` afterwards."""
+              cow_idx: Sequence[int] = (),
+              host_keys: Sequence[Tuple[int, ...]] = (),
+              n_host_reg: Optional[int] = None):
+        """Map ``shared`` (refcount bump each), then one freshly-claimed
+        page per spilled ``host_keys`` entry, then ``n_tail`` fresh tail
+        pages into ``slot``'s table, copy-on-writing the shared pages at
+        indices ``cow_idx`` (the ones the slot must write into).
+
+        Each host key's entry is consumed from the spill tier and its
+        first ``n_host_reg`` pages are RE-REGISTERED device-side (key ->
+        new page, snapshot back into the snap table) — the key moves back
+        to the device tier in the same transaction, keeping the tiers
+        disjoint.  The scheduler excludes the final restored page from
+        re-registration when the prefill resume point writes into it
+        (the content is re-registered at prefill completion instead, the
+        same rule CoW enforces for device-shared pages).
+
+        Returns ``(cow_pairs, restored)``: the (src, dst) CoW pairs to
+        clone device-side, and ``(page, entry)`` per host key — the
+        scheduler scatters ``entry["kv"]`` into ``page``
+        (``engine.restore_pages``).  Every mapped key's hit counter is
+        bumped here — admit time, not match time, so deferred admissions
+        re-planning each cycle cannot inflate the eviction signal."""
         if slot in self._owned:
             raise ValueError(f"slot {slot} already owns pages "
                              f"{self._owned[slot]} (double admission)")
-        n_fresh = n_tail + len(cow_idx)
+        host_keys = list(host_keys)
+        if n_host_reg is None:
+            n_host_reg = len(host_keys)
+        n_fresh = n_tail + len(cow_idx) + len(host_keys)
         if not self.can_admit(shared, n_fresh):
             raise ValueError(f"slot {slot}: wants {n_fresh} fresh pages "
                              f"beyond the {len(shared)} shared ones "
@@ -290,13 +476,40 @@ class RadixPagePool(PagePool):
             if p not in self._ref and p not in self._cached:
                 raise ValueError(f"page {p} is neither in use nor cached "
                                  f"(stale match?)")
+        for k in host_keys:
+            if k not in self._host:
+                raise ValueError("host-tier key vanished between match "
+                                 "and admit (stale match?)")
         owned = list(shared)
         for p in owned:                     # bump before reclaiming so the
             if p in self._cached:           # shared run cannot be evicted
                 del self._cached[p]         # out from under this admission
             self._ref[p] = self._ref.get(p, 0) + 1
+            key = self._key.get(p)
+            if key is not None:
+                self._hits[key] = self._hits.get(key, 0) + 1
         self._owned[slot] = owned           # _release needs ownership set
+        # consume the host entries BEFORE reclaiming: _reclaim spills its
+        # victims into the host tier, and those inserts evict cold keys —
+        # possibly the very ones this admission is restoring
+        ents = []
+        for key in host_keys:
+            ent = self._host.pop(key)
+            self._host_used -= ent["nbytes"]
+            ents.append(ent)
         self._reclaim(n_fresh)
+        restored = []
+        for j, (key, ent) in enumerate(zip(host_keys, ents)):
+            p = self._free.popleft()
+            self._ref[p] = 1
+            owned.append(p)
+            if j < n_host_reg:              # the key returns device-side
+                self._trie[key] = p
+                self._key[p] = key
+                if ent["snap"] is not None:
+                    self._snaps[key] = ent["snap"]
+            self._hits[key] = self._hits.get(key, 0) + 1
+            restored.append((p, ent))
         cow_pairs = []
         for i in cow_idx:
             src, dst = owned[i], self._free.popleft()
@@ -309,7 +522,7 @@ class RadixPagePool(PagePool):
             self._ref[p] = 1
             owned.append(p)
         self._check()
-        return cow_pairs
+        return cow_pairs, restored
 
     def _release_one(self, p: int) -> None:
         """Drop one reference to ``p``; a last owner leaves it CACHED when
@@ -331,17 +544,26 @@ class RadixPagePool(PagePool):
         self._check()
         return pages
 
-    def register(self, slot: int, prompt, snaps: Optional[Dict] = None):
-        """Insert ``slot``'s full prompt pages into the trie (key = token
-        prefix up to each page boundary).  Keys already registered keep
-        their original page.  ``snaps`` maps page-boundary index (1-based
-        page count) to a recurrent snapshot; when given, a boundary
-        WITHOUT a snapshot is skipped — a hybrid arch must never match a
-        prefix it cannot resume from."""
+    def register(self, slot: int, prompt, snaps: Optional[Dict] = None,
+                 up_to: Optional[int] = None):
+        """Insert ``slot``'s completed prompt pages into the trie (key =
+        token prefix up to each page boundary).  Keys already registered
+        keep their original page.  ``snaps`` maps page-boundary index
+        (1-based page count) to a recurrent snapshot; when given, a
+        boundary WITHOUT a snapshot is skipped — a hybrid arch must never
+        match a prefix it cannot resume from.  ``up_to`` caps
+        registration at the first ``up_to`` prompt tokens: a chunked
+        prefill registers each page the moment its last token lands, so
+        concurrent admissions match pages a LIVE slot still owns
+        (refcount bump on those in-use pages, CoW on divergence) instead
+        of waiting for the whole prefill to finish.  A registered key
+        supersedes any host-tier copy (the tiers stay disjoint)."""
         ps = self.page_size
         prompt = [int(t) for t in np.asarray(prompt).ravel()]
+        limit = len(prompt) if up_to is None else min(int(up_to),
+                                                      len(prompt))
         owned = self._owned[slot]
-        for i in range(min(len(prompt) // ps, len(owned))):
+        for i in range(min(limit // ps, len(owned))):
             key = tuple(prompt[:(i + 1) * ps])
             if key in self._trie:
                 continue
@@ -354,6 +576,7 @@ class RadixPagePool(PagePool):
             self._key[p] = key
             if snaps is not None:
                 self._snaps[key] = snaps[i + 1]
+            self._drop_host(key)
         self._check()
 
     # -- the generalized conservation invariant ----------------------------
@@ -378,6 +601,15 @@ class RadixPagePool(PagePool):
         assert ca <= set(self._key), "cached page without a trie key"
         assert set(self._snaps) <= set(self._trie), \
             "snapshot for an unregistered prefix"
+        # the host-tier half: a prefix key lives in exactly one tier, and
+        # the byte accounting is exact under the budget
+        assert not (set(self._host) & set(self._trie)), \
+            "prefix key registered in both tiers at once"
+        assert self._host_used == sum(e["nbytes"]
+                                      for e in self._host.values()), \
+            "host-tier byte accounting drifted"
+        assert self._host_used <= max(self.host_bytes, 0), \
+            "host tier exceeds its byte budget"
 
 
 @dataclass
@@ -410,15 +642,24 @@ class _Admission:
 @dataclass
 class _AdmitPlan:
     """Host-side page plan for one paged admission: how much of the prompt
-    the prefix cache already holds and what must be claimed fresh."""
+    the prefix cache already holds (device pages to map, host-tier keys to
+    swap back in) and what must be claimed fresh."""
     total: int                              # pages the slot will own
     shared: List[int] = field(default_factory=list)  # matched cached pages
     resume: int = 0                         # prefill resumes at this token
     cow_idx: List[int] = field(default_factory=list)  # shared idx to CoW
     snap_key: Optional[Tuple[int, ...]] = None  # recurrent snapshot to load
+    #: spilled prefix keys continuing the device run — each restores into
+    #: a freshly-claimed page instead of re-prefilling
+    host_keys: List[Tuple[int, ...]] = field(default_factory=list)
+    #: how many of ``host_keys`` re-register device-side (all but a final
+    #: restored page the resume point writes into)
+    n_host_reg: int = 0
 
     @property
     def fresh_needed(self) -> int:
+        # host-restored pages claim from the free list like the tail does,
+        # so they are already inside ``total - len(shared)``
         return self.total - len(self.shared) + len(self.cow_idx)
 
 
@@ -436,7 +677,7 @@ class Scheduler:
     def __init__(self, engine: InferenceEngine, state: InferenceState, *,
                  eos_id: Optional[int] = None, spec_k: int = 0,
                  drafter=None, prefix_cache: bool = False,
-                 preempt: bool = False):
+                 preempt: bool = False, host_cache_bytes: int = 0):
         self.engine = engine
         self.state = state
         self.eos_id = eos_id
@@ -449,9 +690,14 @@ class Scheduler:
                              "(spec_k=0 is the parity baseline)")
         self.prefix_cache = bool(prefix_cache)
         self.preempt = bool(preempt)
+        self.host_cache_bytes = int(host_cache_bytes)
         if (self.prefix_cache or self.preempt) and not engine.paged:
             raise ValueError("prefix_cache/preempt are page-pool policies; "
                              "both require paged=True")
+        if self.host_cache_bytes and not self.prefix_cache:
+            raise ValueError("host_cache_bytes spills evicted prefix-cache "
+                             "pages to host memory; it requires "
+                             "prefix_cache=True")
         if self.spec_k and drafter is None:
             from repro.serve.speculative import NgramDrafter
             drafter = NgramDrafter()
@@ -463,8 +709,16 @@ class Scheduler:
         #: accumulated across every finished/aborted run() on this scheduler
         self.lifetime_stats = self._fresh_stats()
         if engine.paged:
-            self._pages = RadixPagePool(engine.num_pages, engine.page_size) \
-                if self.prefix_cache else PagePool(engine.num_pages)
+            if self.prefix_cache:
+                self._pages = RadixPagePool(
+                    engine.num_pages, engine.page_size,
+                    host_bytes=self.host_cache_bytes)
+                # the spill hook closes over the live state: by the time
+                # _reclaim fires the scheduler's state IS the engine state
+                self._pages.set_spill_fn(
+                    lambda page: self.engine.spill_page(self.state, page))
+            else:
+                self._pages = PagePool(engine.num_pages)
         else:
             self._pages = None
         self._last_decode_t: Optional[float] = None
@@ -506,9 +760,26 @@ class Scheduler:
                 # pages copy-on-write duplicated
                 "prefix_lookups": 0, "prefix_hits": 0,
                 "prefix_hit_tokens": 0, "cow_pages": 0,
+                # host spill tier: admissions that swapped >= 1 spilled
+                # page back in, the pages and prefill tokens those swaps
+                # covered, and the pool's spill/evict traffic (drained
+                # from RadixPagePool at the end of each run)
+                "host_hits": 0, "host_restored_pages": 0,
+                "host_hit_tokens": 0, "host_spilled_pages": 0,
+                "host_evicted_pages": 0,
                 # page-aware preemption: victims swapped to host, swapped
                 # requests restored into a slot
                 "preemptions": 0, "restores": 0}
+
+    def _drain_pool_events(self) -> None:
+        """Fold the pool's spill/evict event counters into this run's
+        stats.  Spills happen inside ``_reclaim`` — under some OTHER
+        request's admission — so the pool accumulates them off to the
+        side and the scheduler drains them once per run, right before the
+        lifetime fold (the cost-aware eviction's input signal)."""
+        if isinstance(self._pages, RadixPagePool):
+            for k, v in self._pages.drain_events().items():
+                self.stats[k] += v
 
     def _fold_lifetime(self) -> None:
         for k, v in self.stats.items():
@@ -557,36 +828,56 @@ class Scheduler:
         pages = self._pages.alloc(slot, self._pages_needed(r))
         self.state = self.engine.assign_pages(self.state, slot, pages)
 
-    def _plan(self, r: Request) -> _AdmitPlan:
+    def _plan(self, r: Request,
+              max_run: Optional[int] = None) -> _AdmitPlan:
         """Page plan for admitting ``r``: walk the prefix cache (when on)
-        and decide the shared run, the prefill resume offset, and which
-        shared pages must be copy-on-write duplicated."""
+        across BOTH tiers — the device trie first, then the host spill
+        tier continuing from where the trie walk broke — and decide the
+        shared run, the prefill resume offset, and which shared pages
+        must be copy-on-write duplicated.  ``max_run`` caps the combined
+        matched run (host tail dropped first): the admission loop
+        degrades an unfittable plan page by page down to a cold admission
+        instead of deferring forever on a pool too tight to both KEEP the
+        shared run and claim the fresh pages around it."""
         total = self._pages_needed(r)
         if not self.prefix_cache or "patches" in r.extras:
             return _AdmitPlan(total)
         prompt = np.asarray(r.prompt, np.int32).ravel()
         shared, matched = self._pages.match(prompt)
-        if not shared:
-            return _AdmitPlan(total)
+        host_keys = self._pages.host_match(prompt, len(shared))
         ps = self.engine.page_size
+        cap = len(shared) + len(host_keys)
+        if max_run is not None:
+            cap = min(cap, max_run)
         if self.engine.has_recurrent_state:
             # recurrent/SSM state lives in slot rows, not pages: resume
             # only from a boundary with a registered snapshot, and always
             # keep >= 1 prompt token to re-insert (the first-token logits
             # come out of the prefill) — so the resume point is a boundary
-            # and no shared page is ever written into (no CoW needed)
-            shared = shared[:(len(prompt) - 1) // ps]
-            if not shared:
-                return _AdmitPlan(total)
-            matched = len(shared) * ps
+            # and no shared page is ever written into (no CoW needed).
+            # Spilled entries carry their boundary snapshot, so a host
+            # key is as resumable as a device one.
+            cap = min(cap, (len(prompt) - 1) // ps)
+        if cap <= len(shared):
+            shared, host_keys = shared[:cap], []
+        else:
+            host_keys = host_keys[:cap - len(shared)]
+        if not shared and not host_keys:
+            return _AdmitPlan(total)
+        matched = cap * ps
         resume = min(matched, len(prompt) - 1)
         # a prompt fully covered by cached pages still re-inserts its last
         # token for the first-token logits: that write lands INSIDE the
-        # final shared page, which therefore needs a private CoW copy
+        # final matched page — a device-shared page needs a private CoW
+        # copy; a host-restored page is already private, so it is simply
+        # left unregistered until prefill completion re-registers it
         cow_idx = list(range(resume // ps, len(shared)))
         snap_key = tuple(int(t) for t in prompt[:resume]) \
             if self.engine.has_recurrent_state else None
-        return _AdmitPlan(total, list(shared), resume, cow_idx, snap_key)
+        n_host_reg = min(len(host_keys),
+                         max(0, resume // ps - len(shared)))
+        return _AdmitPlan(total, list(shared), resume, cow_idx, snap_key,
+                          host_keys, n_host_reg)
 
     def _fits(self, plan: _AdmitPlan, reserve: int = 0) -> bool:
         """Can ``plan`` be claimed while leaving ``reserve`` pages
@@ -617,28 +908,42 @@ class Scheduler:
                    if p not in keep and self._pages.refcount(p) == c)
 
     def _claim_pages(self, r: Request, slot: int, plan: _AdmitPlan) -> None:
-        """Execute ``plan``: map shared + fresh pages into ``slot``'s page
-        table, clone CoW pages device-side, and load the recurrent
-        snapshot the resume point needs (hybrid archs)."""
+        """Execute ``plan``: map shared + restored + fresh pages into
+        ``slot``'s page table, scatter host-tier spill blobs back into
+        the restored pages, clone CoW pages device-side, and load the
+        recurrent snapshot the resume point needs (hybrid archs)."""
         if not isinstance(self._pages, RadixPagePool):
             self._alloc_pages(r, slot)
             return
-        cow_pairs = self._pages.admit(
-            slot, plan.shared, plan.total - len(plan.shared), plan.cow_idx)
+        n_tail = plan.total - len(plan.shared) - len(plan.host_keys)
+        cow_pairs, restored = self._pages.admit(
+            slot, plan.shared, n_tail, plan.cow_idx,
+            host_keys=plan.host_keys, n_host_reg=plan.n_host_reg)
         row = self._pages.table(slot)
         keep = set(plan.shared) - {s for s, _ in cow_pairs}
         # only non-shared pages get their pos metadata cleared: the shared
-        # run's pos entries ARE the cached KV's validity record
+        # run's pos entries ARE the cached KV's validity record (restored
+        # pages are cleared, then fully overwritten by the scatter below)
         fresh = [p for p in row if p not in keep]
         self.state = self.engine.assign_pages(self.state, slot, row,
                                               fresh=fresh)
+        if restored:
+            # the host-tier hit: spilled KV returns by one host-to-device
+            # scatter — the prefill those pages held is skipped again
+            self.state = self.engine.restore_pages(
+                self.state, [p for p, _ in restored],
+                [ent["kv"] for _, ent in restored])
+            self.stats["host_hits"] += 1
+            self.stats["host_restored_pages"] += len(restored)
+            self.stats["host_hit_tokens"] += \
+                len(restored) * self.engine.page_size
         if cow_pairs:
             self.state = self.engine.copy_pages(
                 self.state, [s for s, _ in cow_pairs],
                 [d for _, d in cow_pairs])
             self.stats["cow_pages"] += len(cow_pairs)
         self.stats["prefix_lookups"] += 1
-        if plan.shared:
+        if plan.shared or plan.host_keys:
             self.stats["prefix_hits"] += 1
             self.stats["prefix_hit_tokens"] += plan.resume
         if plan.snap_key is not None:
@@ -757,6 +1062,15 @@ class Scheduler:
         if adm.capture and adm.cursor % self.engine.page_size == 0:
             adm.snaps[adm.cursor // self.engine.page_size] = \
                 self.engine.get_slot_state(self.state, adm.slot)
+        if self.prefix_cache and "patches" not in r.extras:
+            # in-flight registration: every completed page becomes
+            # matchable the moment its last token lands, so a concurrent
+            # admission sharing this prompt's prefix rides the LIVE
+            # slot's pages (refcount bump, CoW on divergence) instead of
+            # waiting for the whole prefill to finish
+            self._pages.register(adm.slot, prompt,
+                                 snaps=adm.snaps if adm.capture else None,
+                                 up_to=adm.cursor)
         if adm.cursor < len(prompt):
             return False
         r.generated.append(first)           # final chunk's emitted token
@@ -764,9 +1078,6 @@ class Scheduler:
         self.slot_history[adm.slot].append(r.rid)
         self.admission_order.append(r.rid)
         self._note_first(r)
-        if self.prefix_cache and "patches" not in r.extras:
-            self._pages.register(adm.slot, prompt,
-                                 snaps=adm.snaps if adm.capture else None)
         return True
 
     # -- speculation -------------------------------------------------------
@@ -823,6 +1134,7 @@ class Scheduler:
         try:
             return self._run(requests)
         finally:
+            self._drain_pool_events()
             self._fold_lifetime()
 
     def _run(self, requests: Sequence[Request]) -> Dict[int, List[int]]:
@@ -886,6 +1198,17 @@ class Scheduler:
                             self._preempt_gain(active, plan):
                         self._preempt_one(active, free, swapped)
                         progressed = True
+                    # a matched run can make a plan UNFITTABLE on a tight
+                    # pool (the shared pages are pinned, and CoW + host
+                    # restores each cost a fresh page) even when a plain
+                    # cold admission would fit — degrade the plan page by
+                    # page (host tail drops first) down to cold before
+                    # giving up, or a queue with nothing in flight would
+                    # deadlock on a hit it cannot afford
+                    while not self._fits(plan, reserve) and \
+                            (plan.shared or plan.host_keys):
+                        plan = self._plan(r, max_run=len(plan.shared) +
+                                          len(plan.host_keys) - 1)
                     if not self._fits(plan, reserve):
                         self._defer(r)
                         break

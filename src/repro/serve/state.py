@@ -196,6 +196,26 @@ def gather_page_rows(axes_tree: Any, cache: Any, pages) -> list:
     return out
 
 
+def concat_page_rows(axes_tree: Any, blobs: list) -> list:
+    """Merge per-page ``gather_page_rows`` blobs (leaf-aligned lists, one
+    page each) into a single multi-page blob by concatenating along each
+    leaf's pages axis — so a multi-page host-tier restore pays ONE
+    ``scatter_page_rows`` device transfer instead of one per page.  The
+    blobs must be leaf-aligned with ``axes_tree`` (``None`` on slot-major
+    leaves, as ``gather_page_rows`` produces)."""
+    if not blobs:
+        raise ValueError("concat_page_rows needs at least one blob")
+    ax = jax.tree.leaves(axes_tree, is_leaf=is_axes)
+    out = []
+    for li, a in enumerate(ax):
+        parts = [b[li] for b in blobs]
+        if parts[0] is None:
+            out.append(None)
+            continue
+        out.append(np.concatenate(parts, axis=a.index("pages")))
+    return out
+
+
 def scatter_page_rows(axes_tree: Any, cache: Any, pages, rows: list) -> Any:
     """Write ``rows`` (a ``gather_page_rows`` blob) back into pool pages
     ``pages`` — the swap-in half.  The physical page ids may differ from

@@ -27,6 +27,16 @@ except ImportError:                      # pragma: no cover - optional dep
     pass
 
 
+def pytest_configure(config):
+    # the two slowest 8-device mesh-parity tests carry this marker so a
+    # local quick loop can skip them (`pytest -m "not slow"`); tier-1 CI
+    # runs everything — the marker documents cost, it never gates coverage
+    config.addinivalue_line(
+        "markers",
+        "slow: slowest mesh-parity tests; deselect locally with "
+        '-m "not slow"')
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

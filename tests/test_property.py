@@ -186,8 +186,9 @@ def test_radix_page_pool_refcount_conservation(num_pages, data):
                 with pytest.raises(ValueError):
                     pool.admit(slot, shared, n_tail, cow_idx)
             else:
-                pairs = pool.admit(slot, shared, n_tail, cow_idx)
+                pairs, restored = pool.admit(slot, shared, n_tail, cow_idx)
                 assert len(pairs) == len(cow_idx)
+                assert restored == []       # no host tier configured
                 table = pool.table(slot)
                 assert len(table) == len(set(table)) == total
                 for p in table:
@@ -212,6 +213,105 @@ def test_radix_page_pool_refcount_conservation(num_pages, data):
         check()
     # drain: in-use pages leave through free; registered content stays
     # cached (still reclaimable), so availability returns to the full pool
+    for slot in sorted(prompts):
+        pool.free(slot)
+    check()
+    assert pool.available() == num_pages and pool.pages_in_tables() == 0
+
+
+# ---------------------------------------------------------------------------
+# Two-tier prefix cache (PR 9): the conservation invariant extends to the
+# host spill tier — spilled and device-registered keys are disjoint, byte
+# accounting is exact under the budget, and restore conserves pages
+# ---------------------------------------------------------------------------
+@given(st.integers(4, 16), st.integers(1, 12), st.data())
+def test_two_tier_pool_spill_restore_conservation(num_pages, budget_pages,
+                                                  data):
+    """Arbitrary admit/register/free sequences over a RadixPagePool with a
+    host spill tier (fake uniform-size spill blobs) never break the
+    generalized invariant: device-cached and host-spilled keys stay
+    disjoint (the pool's ``_check`` asserts it after every transaction),
+    host byte accounting is exact and bounded by the budget, and a
+    restore claims pages from the free list — page conservation holds
+    through spill AND restore.  The admit mirror replicates the
+    scheduler's ``_plan``: device match, host continuation, the final
+    restored page excluded from re-registration when the resume point
+    writes into it."""
+    from repro.serve.scheduler import RadixPagePool
+
+    ps = data.draw(st.integers(1, 3), label="page_size")
+    blob_nbytes = 16                            # one fake array per page
+    pool = RadixPagePool(num_pages, ps,
+                         host_bytes=budget_pages * blob_nbytes)
+    pool.set_spill_fn(lambda page: [np.zeros(blob_nbytes, np.int8)])
+    prompts = {}                                # slot -> prompt (reference)
+
+    def check():
+        in_use = pool.in_use_pages()
+        assert pool.available() + len(in_use) == num_pages
+        assert sum(pool.refcount(p) for p in in_use) \
+            == pool.pages_in_tables()
+        # exact byte accounting: uniform blobs, so used == entries * size
+        assert pool.host_used_bytes() \
+            == pool.host_pages() * blob_nbytes <= pool.host_bytes
+
+    for _ in range(data.draw(st.integers(1, 60), label="ops")):
+        op = data.draw(st.sampled_from(["admit", "free", "register"]),
+                       label="op")
+        if op == "admit":
+            slot = data.draw(st.integers(0, 5), label="slot")
+            prompt = data.draw(
+                st.lists(st.integers(0, 2), min_size=1, max_size=3 * ps),
+                label="prompt")
+            total = -(-len(prompt) // ps) + 1   # prompt + decode room
+            shared, matched = pool.match(prompt)
+            host_keys = pool.host_match(prompt, len(shared))
+            resume = min((len(shared) + len(host_keys)) * ps,
+                         len(prompt) - 1)
+            cow_idx = list(range(resume // ps, len(shared)))
+            n_host_reg = min(len(host_keys),
+                             max(0, resume // ps - len(shared)))
+            n_tail = total - len(shared) - len(host_keys)
+            n_fresh = n_tail + len(cow_idx) + len(host_keys)
+            if slot in prompts or not pool.can_admit(shared, n_fresh):
+                with pytest.raises(ValueError):
+                    pool.admit(slot, shared, n_tail, cow_idx,
+                               host_keys=host_keys, n_host_reg=n_host_reg)
+            else:
+                pairs, restored = pool.admit(
+                    slot, shared, n_tail, cow_idx,
+                    host_keys=host_keys, n_host_reg=n_host_reg)
+                assert len(pairs) == len(cow_idx)
+                assert len(restored) == len(host_keys)
+                # every restored key left the host tier in the transaction
+                for key in host_keys:
+                    assert key not in pool.spilled_keys()
+                table = pool.table(slot)
+                assert len(table) == len(set(table)) == total
+                for p, ent in restored:
+                    assert p in table and ent["nbytes"] == blob_nbytes
+                prompts[slot] = list(prompt)
+        elif op == "free" and prompts:
+            slot = data.draw(st.sampled_from(sorted(prompts)),
+                             label="victim")
+            freed = pool.free(slot)
+            assert len(freed) == -(-len(prompts.pop(slot)) // ps) + 1
+        elif op == "register" and prompts:
+            slot = data.draw(st.sampled_from(sorted(prompts)),
+                             label="registrant")
+            up_to = data.draw(
+                st.one_of(st.none(),
+                          st.integers(0, len(prompts[slot]))),
+                label="up_to")
+            pool.register(slot, prompts[slot], up_to=up_to)
+            # a registered key supersedes its host copy: tiers disjoint
+            # (the pool's _check also asserts this internally)
+        else:
+            with pytest.raises(KeyError):
+                pool.free(data.draw(st.integers(0, 5), label="ghost"))
+        check()
+    # drain and reclaim everything: spills fill the host tier, the free
+    # list returns to the full pool — no page leaked to either tier
     for slot in sorted(prompts):
         pool.free(slot)
     check()

@@ -385,6 +385,120 @@ def test_prefix_cache_and_preempt_require_paged():
         Scheduler(eng, state, prefix_cache=True)
     with pytest.raises(ValueError, match="paged"):
         Scheduler(eng, state, preempt=True)
+    peng = InferenceEngine(cfg, slots=2, max_len=16, dtype=jnp.float32,
+                           paged=True, page_size=4)
+    pstate = peng.init_state(T.init(cfg, jax.random.key(0)))
+    with pytest.raises(ValueError, match="prefix_cache"):
+        Scheduler(peng, pstate, host_cache_bytes=1 << 20)
+
+
+# ---------------------------------------------------------------------------
+# Two-tier host spill cache (PR 9): pages evicted from the device pool
+# spill their KV (and recurrent snapshots) to host memory and swap back in
+# on a later radix match instead of re-prefilling
+# ---------------------------------------------------------------------------
+def _family_requests(cfg, families, per_family, prefix_len, tail_len,
+                     gen=GEN, seed=0):
+    """Alternating shared-prefix families: request i uses family
+    ``i % families``.  On a pool that only fits one request, each
+    admission reclaims the previous family's cached pages — the forced
+    spill pattern the host tier exists for."""
+    rng = np.random.default_rng(seed)
+    pres = [rng.integers(0, cfg.vocab_size, prefix_len).astype(np.int32)
+            for _ in range(families)]
+    return [Request(rid=i, max_new=gen, prompt=np.concatenate(
+                [pres[i % families],
+                 rng.integers(0, cfg.vocab_size, tail_len).astype(np.int32)]))
+            for i in range(families * per_family)]
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "gemma2-2b",
+                                  "recurrentgemma-2b"])
+def test_host_tier_hit_matches_cold_and_device_hit(arch):
+    """The PR's acceptance bar: greedy streams are bit-identical cold vs
+    device-hit vs host-hit across attention-only, local/global and
+    recurrent-hybrid archs.  The tight pool forces every admission to
+    reclaim the other family's cached pages, so without a host tier the
+    prefix cache contributes nothing; with one, the spilled pages (and,
+    on the hybrid, the boundary snapshot) come back as real hits."""
+    cfg = _ample_moe(smoke_variant(get_config(arch)))
+    mk = lambda: _family_requests(cfg, 2, 2, 16, 8)
+    kw = dict(slots=1, max_len=28, paged=True, page_size=8, prefill_chunk=6)
+    cold, _ = _serve(cfg, mk(), num_pages=4, **kw)
+    dev, dsched = _serve(cfg, mk(), num_pages=16, **kw,
+                         sched_kw={"prefix_cache": True})
+    host, hsched = _serve(cfg, mk(), num_pages=4, **kw,
+                          sched_kw={"prefix_cache": True,
+                                    "host_cache_bytes": 64 << 20})
+    assert dev == cold, arch
+    assert host == cold, arch
+    # ample pool: hits stay device-side, the host tier is never engaged
+    assert dsched.stats["prefix_hits"] >= 2
+    assert dsched.stats["host_hits"] == 0
+    # tight pool: the 16-token family prefix (2 pages) spills on every
+    # cross-family admission and restores for the family's second request
+    assert hsched.stats["host_hits"] >= 2
+    assert hsched.stats["host_restored_pages"] >= 4
+    assert hsched.stats["host_spilled_pages"] >= 4
+    assert hsched.stats["prefix_hit_tokens"] >= 32
+
+
+def test_inflight_registration_matches_no_cache_run():
+    """In-flight gap closure: a request admitted WHILE a long prompt is
+    still chunk-prefilling must match the prefiller's already-completed
+    pages (refcount bump on live-slot pages).  Pre-fix, registration
+    happened only at prefill completion — r0 finishes long after r2 is
+    admitted, so the hit below could not exist."""
+    cfg = smoke_variant(get_config("olmo-1b"))
+
+    def mk():
+        rng = np.random.default_rng(13)
+        base = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+        return [
+            # r0: 32-token prompt, chunk-prefills for 8 scheduler cycles
+            Request(rid=0, max_new=4, prompt=base),
+            # r1: finishes fast, freeing its slot while r0 still prefills
+            Request(rid=1, max_new=3, prompt=rng.integers(
+                0, cfg.vocab_size, 4).astype(np.int32)),
+            # r2: shares r0's first 16 tokens, admitted into r1's slot
+            Request(rid=2, max_new=4, prompt=np.concatenate(
+                [base[:16],
+                 rng.integers(0, cfg.vocab_size, 4).astype(np.int32)]))]
+
+    kw = dict(slots=2, max_len=36, paged=True, page_size=4, prefill_chunk=4,
+              num_pages=24)
+    ref, _ = _serve(cfg, mk(), **kw)
+    got, sched = _serve(cfg, mk(), **kw, sched_kw={"prefix_cache": True})
+    assert got == ref
+    # by the cycle r1's slot frees, r0 has registered >= 2 complete pages
+    assert sched.stats["prefix_hits"] >= 1
+    assert sched.stats["prefix_hit_tokens"] >= 8
+
+
+def test_host_tier_lifetime_stats_fold_across_runs():
+    """A second forced-spill batch through the SAME scheduler: the host
+    counters folded into ``lifetime_stats`` must accumulate across runs
+    (sum semantics) while max-type keys fold with max — and the per-run
+    ``stats`` must describe only their own batch."""
+    cfg = smoke_variant(get_config("qwen2-1.5b"))
+    eng = InferenceEngine(cfg, slots=1, max_len=28, dtype=jnp.float32,
+                          paged=True, page_size=8, num_pages=4)
+    sched = Scheduler(eng, eng.init_state(T.init(cfg, jax.random.key(0))),
+                      prefix_cache=True, host_cache_bytes=64 << 20)
+    sched.run(_family_requests(cfg, 2, 2, 16, 8))
+    first = dict(sched.stats)
+    assert first["host_hits"] >= 2
+    assert first["host_spilled_pages"] > 0
+    # fresh families: run 2 forces its own spill/restore cycle
+    sched.run(_family_requests(cfg, 2, 2, 16, 8, seed=1))
+    second = dict(sched.stats)
+    assert second["host_hits"] >= 2
+    for k in ("host_hits", "host_hit_tokens", "host_restored_pages",
+              "host_spilled_pages", "host_evicted_pages",
+              "prefix_hits", "prefix_hit_tokens"):
+        assert sched.lifetime_stats[k] == first[k] + second[k], k
+    assert sched.lifetime_stats["max_defer_cycles"] == \
+        max(first["max_defer_cycles"], second["max_defer_cycles"])
 
 
 # ---------------------------------------------------------------------------
@@ -519,6 +633,7 @@ def test_inference_state_shardings_match_rule_tables():
 
 
 @needs8
+@pytest.mark.slow  # ~19s on 8 host devices; CI still runs it
 def test_mesh_serving_matches_single_device_tokens():
     """Greedy streams served off the (4, 2)-sharded state bit-match the
     default 1x1-mesh engine."""
@@ -531,6 +646,7 @@ def test_mesh_serving_matches_single_device_tokens():
 
 
 @needs8
+@pytest.mark.slow  # ~30s/arch on 8 host devices; CI still runs it
 @pytest.mark.parametrize("arch", ["qwen2-1.5b", "gemma2-2b",
                                   "recurrentgemma-2b"])
 def test_paged_vs_contiguous_parity_on_mesh(arch):
