@@ -27,6 +27,15 @@ Subcommands:
                   ``prefix_hit_tokens > 0`` and ``prefill_skipped_pct >
                   0`` where the no-host-tier run records 0 — the spilled
                   pages were genuinely swapped back in, not re-prefilled.
+* ``obs``       — the same queue served with and without
+                  ``--trace-out/--metrics-out`` must emit bit-identical
+                  streams (observability is a pure observer); the saved
+                  trace must be valid Chrome trace-event JSON whose spans
+                  cover >= 95% of the serve window, and the span-derived
+                  TTFTs must match the legacy per-request TTFT dict (the
+                  ``serve.ttft_s`` series in the metrics JSONL) within
+                  1 ms.  Artifacts land in ``--out-dir`` so CI can upload
+                  them.
 
 No inline Python lives in ``ci.yml``; this file IS the smoke suite.  It is
 also the format-gated exemplar: ``ruff format --check scripts/`` runs in
@@ -130,6 +139,72 @@ def smoke_host_tier(args) -> None:
         os.unlink(qpath)
 
 
+def smoke_obs(args) -> None:
+    os.makedirs(args.out_dir, exist_ok=True)
+    trace_path = os.path.join(args.out_dir, "trace.json")
+    metrics_path = os.path.join(args.out_dir, "metrics.jsonl")
+    base = ["--arch", args.arch, "--smoke", "--requests", "4"]
+    base += ["--batch-size", "2", "--prompt-len", "24", "--gen", "8"]
+    base += ["--prefill-chunk", "8"]
+    plain_doc, plain_streams = run_serve([], base)
+    flags = ["--trace-out", trace_path, "--metrics-out", metrics_path]
+    obs_doc, obs_streams = run_serve(flags, base)
+    # observability must be a pure observer: bit-identical streams
+    assert obs_streams == plain_streams, (plain_streams, obs_streams)
+    assert obs_doc["stream_digest"] == plain_doc["stream_digest"]
+
+    with open(trace_path) as f:
+        trace = json.load(f)
+    events = trace["traceEvents"]
+    spans = [e for e in events if e.get("ph") == "X"]
+    assert spans, "trace has no complete spans"
+    for e in spans:  # Chrome trace-event schema: ints + complete-span fields
+        assert isinstance(e["pid"], int) and isinstance(e["tid"], int), e
+        assert "name" in e and "ts" in e and e["dur"] >= 0, e
+    # undo the Chrome int-tid mapping so the repro.obs helpers apply
+    tid_name = {
+        e["tid"]: e["args"]["name"]
+        for e in events
+        if e.get("ph") == "M" and e.get("name") == "thread_name"
+    }
+    raw = [
+        dict(e, tid=tid_name.get(e["tid"], str(e["tid"])))
+        for e in events
+        if e.get("ph") in ("X", "i")
+    ]
+    for e in raw:
+        if e["ph"] == "X" and e["tid"].startswith("rid"):
+            assert "rid" in e["args"], e
+
+    from repro.obs.trace import derive_request_metrics, span_coverage
+
+    cov = span_coverage(raw)
+    assert cov >= 0.95, f"span coverage {cov:.3f} < 0.95"
+    per = derive_request_metrics(raw)
+    assert len(per) == 4, sorted(per)
+
+    rows = [json.loads(ln) for ln in open(metrics_path)]
+    ttft_rows = [d for d in rows if d.get("name") == "serve.ttft_s"]
+    assert ttft_rows, "metrics JSONL lacks the serve.ttft_s series"
+    # span-derived TTFT vs the legacy per-request dict: within 1 ms
+    for d in ttft_rows:
+        rid = int(d["label"])
+        assert abs(per[rid]["ttft_s"] - d["value"]) < 1e-3, (rid, d, per[rid])
+    vals = [d["value"] for d in ttft_rows]
+    assert abs(float(np.percentile(vals, 50)) - obs_doc["ttft_p50_s"]) < 1e-3
+    gap = [d for d in rows if d.get("name") == "serve.decode_gap_s"]
+    assert gap and gap[0]["count"] > 0, gap
+    print(
+        "obs smoke ok:",
+        {
+            "spans": len(spans),
+            "coverage": round(cov, 4),
+            "ttft_p50_s": obs_doc["ttft_p50_s"],
+            "decode_gap_p99_s": obs_doc["decode_gap_p99_s"],
+        },
+    )
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen2-1.5b", help="arch for every smoke")
@@ -138,11 +213,14 @@ def main(argv=None) -> int:
     sub.add_parser("sampling", help="sampled serve reproducibility")
     ht = sub.add_parser("host-tier", help="forced-spill host-tier CLI parity")
     ht.add_argument("--host-cache-mb", type=float, default=64.0)
+    ob = sub.add_parser("obs", help="trace/metrics schema + digest parity")
+    ob.add_argument("--out-dir", default="obs-artifacts")
     args = ap.parse_args(argv)
     cmds = {
         "prefix": smoke_prefix,
         "sampling": smoke_sampling,
         "host-tier": smoke_host_tier,
+        "obs": smoke_obs,
     }
     cmds[args.cmd](args)
     return 0

@@ -57,6 +57,9 @@ from repro.configs import get_config, smoke_variant
 from repro.core import domst
 from repro.data.pipeline import make_domst_windows, stacked_test_batch
 from repro.models import transformer as tfm
+from repro.obs import (
+    MetricRegistry, Tracer, derive_request_metrics, percentiles, profiler,
+)
 from repro.serve import (
     Forecaster, InferenceEngine, ModelDrafter, NgramDrafter, Request,
     SamplingParams, Scheduler, stream_digest,
@@ -175,16 +178,31 @@ def serve_lm(args) -> dict:
     if args.host_cache_mb and not args.prefix_cache:
         raise SystemExit("--host-cache-mb is a spill tier FOR the prefix "
                          "cache; it requires --prefix-cache")
+    registry = MetricRegistry()
+    tracer = Tracer()
     sched = Scheduler(engine, state,
                       eos_id=args.eos if args.eos >= 0 else None,
                       spec_k=args.spec_k, drafter=drafter,
                       prefix_cache=args.prefix_cache, preempt=args.preempt,
-                      host_cache_bytes=int(args.host_cache_mb * 2 ** 20))
+                      host_cache_bytes=int(args.host_cache_mb * 2 ** 20),
+                      registry=registry, tracer=tracer)
     t0 = time.perf_counter()
-    generated = sched.run(reqs)
+    with profiler.profile(args.profile_dir):
+        generated = sched.run(reqs)
     wall = time.perf_counter() - t0
     total_tokens = sum(len(g) for g in generated.values())
     st = sched.stats
+    # per-request latency percentiles derived FROM the lifecycle spans —
+    # the legacy sched.ttft dict agrees to float precision (tests pin the
+    # 1 ms acceptance bound), so there is exactly one timing source
+    per_req = derive_request_metrics(tracer.events())
+    ttft_vals = [m["ttft_s"] for m in per_req.values()]
+    ttft_pct = percentiles(ttft_vals) if ttft_vals \
+        else {"p50": 0.0, "p99": 0.0}
+    gap_p99 = sched.decode_gaps.quantile(99) \
+        if sched.decode_gaps.count else 0.0
+    registry.gauge("serve.tok_per_s").set(total_tokens / wall)
+    registry.gauge("serve.wall_s").set(wall)
     out = {"arch": cfg.name, "requests": len(generated),
            "tokens": total_tokens, "wall_s": round(wall, 3),
            "tok_per_s": round(total_tokens / wall, 1),
@@ -239,10 +257,21 @@ def serve_lm(args) -> dict:
            "preemptions": st["preemptions"], "restores": st["restores"],
            "deferred_admissions": st["deferred_admissions"],
            "max_defer_cycles": st["max_defer_cycles"],
+           # span-derived latency percentiles (see per_req above) and the
+           # decode-gap distribution tail — the stall metric; the old
+           # max_decode_gap_s scalar is this histogram's p100
+           "ttft_p50_s": round(ttft_pct["p50"], 6),
+           "ttft_p99_s": round(ttft_pct["p99"], 6),
+           "decode_gap_p99_s": round(gap_p99, 6),
+           "max_decode_gap_s": round(st["max_decode_gap_s"], 6),
            "device_count": len(jax.devices())}
     print(json.dumps(out))
     for r in reqs[:2]:
         print(f"req {r.rid}: {r.generated[:12]}...")
+    if args.trace_out:
+        tracer.save(args.trace_out)
+    if args.metrics_out:
+        registry.dump_jsonl(args.metrics_out)
     return out
 
 
@@ -258,7 +287,8 @@ def serve_domst(args) -> dict:
     params = fc.place_params(params)
     jax.block_until_ready(fc(params, held)["qhat"])   # compile warmup, so
     t0 = time.perf_counter()                          # the rate is honest
-    res = fc(params, held)
+    with profiler.profile(args.profile_dir):
+        res = fc(params, held)
     nses = [round(float(x), 6) for x in np.asarray(res["nse"])]
     wall = time.perf_counter() - t0
     horizon = int(held["discharge"].shape[1])
@@ -361,6 +391,19 @@ def main() -> None:
     ap.add_argument("--ckpt", default="",
                     help="TrainState .npz from repro.launch.train; only the "
                          "params subtree is restored")
+    ap.add_argument("--trace-out", default="",
+                    help="write the run's request-lifecycle spans as "
+                         "Chrome trace-event JSON (open the file in "
+                         "ui.perfetto.dev or chrome://tracing)")
+    ap.add_argument("--metrics-out", default="",
+                    help="dump the metric registry as JSONL, one metric "
+                         "per line (histograms carry count/sum/min/max/"
+                         "mean/p50/p90/p99)")
+    ap.add_argument("--profile-dir", default="",
+                    help="open a jax.profiler trace window around the run, "
+                         "writing device traces here; engine dispatch is "
+                         "TraceAnnotation-scoped so host phases line up "
+                         "with the device timeline")
     ap.add_argument("--watersheds", type=int, default=23,
                     help="domst: watershed count (must match the ckpt run)")
     ap.add_argument("--days", type=int, default=400,

@@ -42,6 +42,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import time
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +59,7 @@ from repro.data.tokens import TokenSource, synthetic_token_batch
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.metrics import Meter
 from repro.models import transformer as tfm
+from repro.obs import MetricRegistry, profiler
 from repro.train import Engine
 
 # held-out token batches are seeded far outside the training stream's
@@ -71,6 +73,41 @@ def _make_mesh(name: str):
     return make_production_mesh(multi_pod=name == "multipod")
 
 
+def _timed(loader, registry: MetricRegistry):
+    """Iterate ``loader`` while measuring, per step, the host-side wait
+    for the next batch (``train.loader_wait_s`` — nonzero means the step
+    outran the input pipeline's prefetch) and the wall-clock of the loop
+    body (``train.step_s`` — dispatch plus whatever sync the body does).
+    The last wait also lands in the ``train.loader_wait_last_s`` gauge."""
+    wait_h = registry.histogram("train.loader_wait_s")
+    step_h = registry.histogram("train.step_s")
+    wait_g = registry.gauge("train.loader_wait_last_s")
+    it = iter(loader)
+    while True:
+        t = time.perf_counter()
+        try:
+            batch = next(it)
+        except StopIteration:
+            return
+        now = time.perf_counter()
+        wait_h.record(now - t)
+        wait_g.set(now - t)
+        yield batch
+        step_h.record(time.perf_counter() - now)
+
+
+def _train_metrics(registry: MetricRegistry) -> dict:
+    """Step-timing summary for the result JSON (empty before any step)."""
+    step_h = registry.histogram("train.step_s")
+    wait_h = registry.histogram("train.loader_wait_s")
+    if not step_h.count:
+        return {}
+    return {"step_p50_s": round(step_h.quantile(50), 6),
+            "step_p99_s": round(step_h.quantile(99), 6),
+            "loader_wait_p99_s": round(wait_h.quantile(99), 6),
+            "loader_wait_s": round(wait_h.sum, 6)}
+
+
 def train_domst(args) -> dict:
     cfg = get_config(args.arch)
     tc = TrainConfig(learning_rate=args.lr, total_steps=args.steps or 2000,
@@ -80,8 +117,11 @@ def train_domst(args) -> dict:
     # (stacked_test_batch / train_test_split) stays genuinely held out
     ip = InputPipeline([train_split(w) for w in windows],
                        batch_size=args.batch_size, seed=args.seed)
-    meter = Meter()
+    registry = MetricRegistry()
+    meter = Meter(registry=registry, prefix="train.")
     mesh = _make_mesh(args.mesh)
+    if args.profile_dir:                # device-trace window over the run
+        profiler.start(args.profile_dir)
 
     if args.mode == "stacked":          # IP-D: all watersheds per step
         engine = Engine.for_domst(cfg, tc, mesh=mesh, stacked=True)
@@ -104,7 +144,7 @@ def train_domst(args) -> dict:
         loader = ShardedLoader(source, engine, prefetch=args.prefetch,
                                start_step=start,
                                num_steps=args.epochs * spe)
-        for batch in loader:
+        for batch in _timed(loader, registry):
             state, m = engine.step(state, batch)
             step = loader.cursor
             if args.eval_interval and step % args.eval_interval == 0:
@@ -134,7 +174,7 @@ def train_domst(args) -> dict:
             loader = ShardedLoader(
                 source, engine, prefetch=args.prefetch,
                 num_steps=args.epochs * source.steps_per_epoch)
-            for batch in loader:
+            for batch in _timed(loader, registry):
                 state, m = engine.step(state, batch)
             _, te = train_test_split(w)
             ev = engine.eval_step(state, engine.place_batch(te))
@@ -142,11 +182,15 @@ def train_domst(args) -> dict:
             print(f"watershed {w.watershed_id} loss {float(m['loss']):.4f} "
                   f"nse {nses[-1]:.4f} ({meter.elapsed():.1f}s)", flush=True)
 
+    if args.profile_dir:
+        profiler.stop()
     result = {"arch": args.arch, "mode": args.mode,
               "accum_steps": args.accum_steps, "prefetch": args.prefetch,
               "mean_nse": float(np.mean(nses)), "nse": nses,
-              "wall_s": meter.elapsed()}
+              "wall_s": meter.elapsed(), **_train_metrics(registry)}
     print(json.dumps(result, indent=2))
+    if args.metrics_out:
+        registry.dump_jsonl(args.metrics_out)
     if args.ckpt:                       # stacked only (guarded above)
         engine.save(args.ckpt, state)   # the full multi-replica TrainState
         print("saved", args.ckpt)
@@ -182,9 +226,12 @@ def train_lm(args) -> dict:
             seed=args.seed + EVAL_SEED_OFFSET))
     loader = ShardedLoader(source, engine, prefetch=args.prefetch,
                            start_step=start, num_steps=args.steps)
-    meter = Meter()
+    registry = MetricRegistry()
+    meter = Meter(registry=registry, prefix="train.")
+    if args.profile_dir:                # device-trace window over the run
+        profiler.start(args.profile_dir)
     losses = []
-    for batch in loader:
+    for batch in _timed(loader, registry):
         state, m = engine.step(state, batch)
         losses.append(float(m["loss"]))
         i = loader.cursor - start - 1
@@ -195,10 +242,15 @@ def train_lm(args) -> dict:
         if i % max(args.steps // 10, 1) == 0:
             print(f"step {i:5d} loss {losses[-1]:.4f} "
                   f"({meter.elapsed():.1f}s)", flush=True)
+    if args.profile_dir:
+        profiler.stop()
     result = {"arch": cfg.name, "first_loss": losses[0],
               "last_loss": losses[-1], "steps": int(state.step),
-              "prefetch": args.prefetch, "wall_s": meter.elapsed()}
+              "prefetch": args.prefetch, "wall_s": meter.elapsed(),
+              **_train_metrics(registry)}
     print(json.dumps(result))
+    if args.metrics_out:
+        registry.dump_jsonl(args.metrics_out)
     if args.ckpt:
         engine.save(args.ckpt, state)
         print("saved", args.ckpt)
@@ -236,6 +288,14 @@ def main() -> None:
     ap.add_argument("--resume", default="",
                     help="restore a TrainState checkpoint before training "
                          "(the loader resumes the batch stream at its step)")
+    ap.add_argument("--metrics-out", default="",
+                    help="dump the metric registry as JSONL (per-step "
+                         "timing histogram train.step_s, loader-wait "
+                         "histogram/gauge, metered loss)")
+    ap.add_argument("--profile-dir", default="",
+                    help="open a jax.profiler trace window over the "
+                         "training loop, writing device traces here; "
+                         "Engine.step is TraceAnnotation-scoped")
     args = ap.parse_args()
     if args.arch.startswith("domst"):
         train_domst(args)

@@ -1,30 +1,53 @@
-"""Lightweight host-side metric accumulation for training loops."""
+"""Host-side metric accumulation for training loops, over the registry.
+
+:class:`Meter` keeps its historical ``update``/``mean``/``last``/
+``elapsed``/``summary`` API, but every ``update`` now lands in a
+:class:`~repro.obs.registry.Histogram` of a shared
+:class:`~repro.obs.registry.MetricRegistry` — so a training loop that
+meters ``loss`` also gets loss quantiles for free, and the launcher's
+``--metrics-out`` JSONL dump sees every metered key (as
+``<prefix><key>``) without a second bookkeeping path.
+"""
 from __future__ import annotations
 
-import collections
-import time
-from typing import Dict, List
+from typing import Dict, Optional
+
+from repro.obs.registry import Histogram, MetricRegistry
 
 
 class Meter:
-    def __init__(self) -> None:
-        self._vals: Dict[str, List[float]] = collections.defaultdict(list)
-        self._t0 = time.perf_counter()
+    """Thin named-histogram view over a :class:`MetricRegistry`.
+
+    ``Meter()`` with no arguments owns a private registry (the historical
+    standalone behavior); pass ``registry=`` to share the launcher's
+    store, and ``prefix=`` to namespace the metered keys in it
+    (``prefix="train."`` puts ``update(loss=...)`` under ``train.loss``).
+    """
+
+    def __init__(self, registry: Optional[MetricRegistry] = None,
+                 prefix: str = "") -> None:
+        self.registry = registry if registry is not None else MetricRegistry()
+        self.prefix = prefix
+        self._keys: Dict[str, str] = {}     # metered key -> registry name
+
+    def _hist(self, key: str) -> Histogram:
+        name = self._keys.get(key)
+        if name is None:
+            name = self._keys[key] = f"{self.prefix}{key}"
+        return self.registry.histogram(name)
 
     def update(self, **metrics: float) -> None:
         for k, v in metrics.items():
-            self._vals[k].append(float(v))
+            self._hist(k).record(float(v))
 
     def mean(self, key: str) -> float:
-        v = self._vals.get(key, [])
-        return sum(v) / len(v) if v else float("nan")
+        return self._hist(key).mean
 
     def last(self, key: str) -> float:
-        v = self._vals.get(key, [])
-        return v[-1] if v else float("nan")
+        return self._hist(key).last
 
     def elapsed(self) -> float:
-        return time.perf_counter() - self._t0
+        return self.registry.elapsed()
 
     def summary(self) -> Dict[str, float]:
-        return {k: self.mean(k) for k in self._vals}
+        return {k: self.mean(k) for k in self._keys}

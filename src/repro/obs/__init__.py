@@ -1,0 +1,29 @@
+"""Unified telemetry: metric registry, request-lifecycle tracer, and
+optional device-profiler hooks.  See ``registry``/``trace``/``profiler``
+module docstrings for the contracts; everything is pure host-side so
+enabling any of it leaves model outputs bit-identical."""
+from repro.obs import profiler
+from repro.obs.registry import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricRegistry,
+    Series,
+    StatGroup,
+    percentiles,
+)
+from repro.obs.trace import Tracer, derive_request_metrics, span_coverage
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricRegistry",
+    "Series",
+    "StatGroup",
+    "Tracer",
+    "derive_request_metrics",
+    "percentiles",
+    "profiler",
+    "span_coverage",
+]

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro import checkpoint as ckpt
 from repro.configs.base import ModelConfig
+from repro.obs import profiler
 from repro.distributed.sharding import (
     logical_sharding, make_rules, resolve_pspec, tree_shardings,
 )
@@ -291,6 +292,11 @@ class InferenceEngine:
         ids may differ — page contents are keyed by absolute position).
         The victim resumes decoding exactly where it was preempted."""
         assert self.paged, "swap_in is a paged-mode operation"
+        with profiler.annotate("serve.swap_in"):
+            return self._swap_in(state, slot, pages, blob)
+
+    def _swap_in(self, state: InferenceState, slot: int, pages,
+                 blob: dict) -> InferenceState:
         state = self.assign_pages(state, slot, pages)
         cache = scatter_page_rows(self._cache_axes, state.cache, pages,
                                   blob["kv"])
@@ -330,11 +336,14 @@ class InferenceEngine:
         page contents are keyed by the absolute positions in the pos
         leaf, exactly like a preemption ``swap_in``."""
         assert self.paged, "restore_pages is a paged-mode operation"
-        rows = concat_page_rows(self._cache_axes, blobs)
-        cache = scatter_page_rows(self._cache_axes, state.cache, pages, rows)
-        if self._explicit:
-            cache = jax.device_put(cache, self.state_shardings(state).cache)
-        return state._replace(cache=cache)
+        with profiler.annotate("serve.restore_pages"):
+            rows = concat_page_rows(self._cache_axes, blobs)
+            cache = scatter_page_rows(self._cache_axes, state.cache, pages,
+                                      rows)
+            if self._explicit:
+                cache = jax.device_put(cache,
+                                       self.state_shardings(state).cache)
+            return state._replace(cache=cache)
 
     def release_pages(self, state: InferenceState,
                       slot: int) -> InferenceState:
@@ -628,7 +637,12 @@ class InferenceEngine:
         the slot's page row must already be installed (``assign_pages``)."""
         inputs = {k: jnp.asarray(v) for k, v in inputs.items()}
         jfn = self._get_jit("insert", state, inputs)
-        return self._run(jfn, state, inputs, jnp.asarray(slot, jnp.int32))
+        # annotate() scopes are live only inside an open jax.profiler
+        # window (--profile-dir): host phase names then line up with the
+        # device timeline; otherwise they are null contexts
+        with profiler.annotate("serve.insert"):
+            return self._run(jfn, state, inputs,
+                             jnp.asarray(slot, jnp.int32))
 
     def insert_chunk(self, state: InferenceState,
                      inputs: Dict[str, jax.Array], slot: int,
@@ -642,8 +656,10 @@ class InferenceEngine:
         assert self.paged, "insert_chunk requires the paged cache"
         inputs = {k: jnp.asarray(v) for k, v in inputs.items()}
         jfn = self._get_jit("chunk", state, inputs)
-        return self._run(jfn, state, inputs, jnp.asarray(slot, jnp.int32),
-                         jnp.asarray(pos_start, jnp.int32))
+        with profiler.annotate("serve.insert_chunk"):
+            return self._run(jfn, state, inputs,
+                             jnp.asarray(slot, jnp.int32),
+                             jnp.asarray(pos_start, jnp.int32))
 
     def verify(self, state: InferenceState, drafts, draft_len, active):
         """One fused speculative decode step over ALL slots.  ``drafts``
@@ -663,9 +679,10 @@ class InferenceEngine:
                              "is the parity baseline)")
         drafts = jnp.asarray(drafts, jnp.int32)
         jfn = self._get_jit("verify", state, {"drafts": drafts})
-        return self._run(jfn, state, drafts,
-                         jnp.asarray(draft_len, jnp.int32),
-                         jnp.asarray(active, bool))
+        with profiler.annotate("serve.verify"):
+            return self._run(jfn, state, drafts,
+                             jnp.asarray(draft_len, jnp.int32),
+                             jnp.asarray(active, bool))
 
     def decode(self, state: InferenceState, active=None):
         """One decode step over ALL slots: each slot's last token advances
@@ -683,9 +700,11 @@ class InferenceEngine:
             if active is None:
                 active = np.ones((self.slots,), bool)
             jfn = self._get_jit("decode_paged", state)
-            return self._run(jfn, state, jnp.asarray(active, bool))
+            with profiler.annotate("serve.decode"):
+                return self._run(jfn, state, jnp.asarray(active, bool))
         if active is not None:
             raise ValueError("active masks are a paged-mode feature; the "
                              "contiguous decode advances every slot")
         jfn = self._get_jit("decode", state)
-        return self._run(jfn, state)
+        with profiler.annotate("serve.decode"):
+            return self._run(jfn, state)

@@ -102,6 +102,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs.registry import MetricRegistry
+from repro.obs.trace import Tracer
 from repro.serve.engine import InferenceEngine
 from repro.serve.sampling import SamplingParams
 from repro.serve.state import InferenceState
@@ -671,13 +673,52 @@ class _Swapped:
     n_pages: int
 
 
+#: the scheduler's per-run stat family — one ``MetricRegistry`` StatGroup
+#: per scheduler under ``sched.run.*`` (and its lifetime twin under
+#: ``sched.lifetime.*``), keeping the historical flat-dict API
+_STAT_DEFAULTS: Dict[str, float] = {
+    "prefill_tokens": 0, "prefill_s": 0.0, "prefill_chunks": 0,
+    "decode_tokens": 0, "decode_s": 0.0, "decode_steps": 0,
+    # slot-steps: sum over fused rounds of |active slots| — the
+    # denominator for accepted-tokens-per-step (== decode_tokens
+    # without speculation; smaller when drafts are accepted)
+    "decode_slot_steps": 0,
+    # worst single stall; the full distribution lives in the
+    # ``serve.decode_gap_s`` histogram (``Scheduler.decode_gaps``)
+    "max_decode_gap_s": 0.0,
+    # speculative counters: proposed drafts, drafts accepted,
+    # verify rounds (a subset of decode_steps)
+    "spec_proposed": 0, "spec_accepted": 0, "spec_steps": 0,
+    # admission-pressure counters: total defer cycles across
+    # requests, and the worst single request's defer count
+    "deferred_admissions": 0, "max_defer_cycles": 0,
+    # prefix-cache counters: admissions that consulted the
+    # trie, admissions that mapped >= 1 cached page, prefill
+    # tokens skipped by resuming past the shared run, and
+    # pages copy-on-write duplicated
+    "prefix_lookups": 0, "prefix_hits": 0,
+    "prefix_hit_tokens": 0, "cow_pages": 0,
+    # host spill tier: admissions that swapped >= 1 spilled
+    # page back in, the pages and prefill tokens those swaps
+    # covered, and the pool's spill/evict traffic (drained
+    # from RadixPagePool at the end of each run)
+    "host_hits": 0, "host_restored_pages": 0,
+    "host_hit_tokens": 0, "host_spilled_pages": 0,
+    "host_evicted_pages": 0,
+    # page-aware preemption: victims swapped to host, swapped
+    # requests restored into a slot
+    "preemptions": 0, "restores": 0}
+
+
 class Scheduler:
     """Drives an :class:`InferenceEngine` over a queue of requests."""
 
     def __init__(self, engine: InferenceEngine, state: InferenceState, *,
                  eos_id: Optional[int] = None, spec_k: int = 0,
                  drafter=None, prefix_cache: bool = False,
-                 preempt: bool = False, host_cache_bytes: int = 0):
+                 preempt: bool = False, host_cache_bytes: int = 0,
+                 registry: Optional[MetricRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         self.engine = engine
         self.state = state
         self.eos_id = eos_id
@@ -705,27 +746,48 @@ class Scheduler:
         #: per-slot rid history — lets tests assert slots are actually reused
         self.slot_history: Dict[int, List[int]] = {
             s: [] for s in range(engine.slots)}
-        self.stats = self._fresh_stats()
+        #: telemetry: every measurement lands in the registry (pass one in
+        #: to share a store across schedulers/launchers) and every phase
+        #: emits a span on the tracer — both pure host-side, so enabling
+        #: them cannot perturb emitted streams (``tests/test_obs.py``)
+        self.registry = registry if registry is not None else MetricRegistry()
+        self.tracer = tracer if tracer is not None else Tracer()
+        #: the historical flat per-run stats dict, now a registry StatGroup
+        #: view: same dict API (``stats[k] += v``, ``dict(stats)``), every
+        #: key visible to snapshot/dump as ``sched.run.<key>``
+        self.stats = self.registry.group("sched.run", _STAT_DEFAULTS)
         #: accumulated across every finished/aborted run() on this scheduler
-        self.lifetime_stats = self._fresh_stats()
+        self.lifetime_stats = self.registry.group("sched.lifetime",
+                                                  _STAT_DEFAULTS)
+        #: decode-gap DISTRIBUTION (the stall metric): per run, like
+        #: ``stats`` — ``decode_gaps.quantile(99)`` replaces eyeballing
+        #: the ``max_decode_gap_s`` scalar (which stays, as the p100)
+        self.decode_gaps = self.registry.histogram("serve.decode_gap_s")
         if engine.paged:
             if self.prefix_cache:
                 self._pages = RadixPagePool(
                     engine.num_pages, engine.page_size,
                     host_bytes=self.host_cache_bytes)
+
                 # the spill hook closes over the live state: by the time
                 # _reclaim fires the scheduler's state IS the engine state
-                self._pages.set_spill_fn(
-                    lambda page: self.engine.spill_page(self.state, page))
+                def _spill(page):
+                    with self.tracer.span("spill", page=page):
+                        return self.engine.spill_page(self.state, page)
+
+                self._pages.set_spill_fn(_spill)
             else:
                 self._pages = PagePool(engine.num_pages)
         else:
             self._pages = None
         self._last_decode_t: Optional[float] = None
         #: per-request time-to-first-token for the current run (seconds
-        #: from run() start to the request's first generated token)
-        self.ttft: Dict[int, float] = {}
+        #: from run() start to the request's first generated token) — a
+        #: registry Series, so the plain dict API callers index is the
+        #: same store the metrics dump reports as ``serve.ttft_s``
+        self.ttft = self.registry.series("serve.ttft_s")
         self._run_t0: float = 0.0
+        self._rid_open: Dict[int, Optional[int]] = {}  # rid -> open span
         self._defer_counts: Dict[int, int] = {}
         self._admit_seq: Dict[int, int] = {}   # slot -> admission sequence
         self._seq = 0
@@ -738,38 +800,6 @@ class Scheduler:
         # reuse skips the host round-trip entirely (the default rows are
         # already greedy)
         self._sampled_slots: set = set()
-
-    @staticmethod
-    def _fresh_stats() -> Dict[str, float]:
-        return {"prefill_tokens": 0, "prefill_s": 0.0, "prefill_chunks": 0,
-                "decode_tokens": 0, "decode_s": 0.0, "decode_steps": 0,
-                # slot-steps: sum over fused rounds of |active slots| — the
-                # denominator for accepted-tokens-per-step (== decode_tokens
-                # without speculation; smaller when drafts are accepted)
-                "decode_slot_steps": 0,
-                "max_decode_gap_s": 0.0,
-                # speculative counters: proposed drafts, drafts accepted,
-                # verify rounds (a subset of decode_steps)
-                "spec_proposed": 0, "spec_accepted": 0, "spec_steps": 0,
-                # admission-pressure counters: total defer cycles across
-                # requests, and the worst single request's defer count
-                "deferred_admissions": 0, "max_defer_cycles": 0,
-                # prefix-cache counters: admissions that consulted the
-                # trie, admissions that mapped >= 1 cached page, prefill
-                # tokens skipped by resuming past the shared run, and
-                # pages copy-on-write duplicated
-                "prefix_lookups": 0, "prefix_hits": 0,
-                "prefix_hit_tokens": 0, "cow_pages": 0,
-                # host spill tier: admissions that swapped >= 1 spilled
-                # page back in, the pages and prefill tokens those swaps
-                # covered, and the pool's spill/evict traffic (drained
-                # from RadixPagePool at the end of each run)
-                "host_hits": 0, "host_restored_pages": 0,
-                "host_hit_tokens": 0, "host_spilled_pages": 0,
-                "host_evicted_pages": 0,
-                # page-aware preemption: victims swapped to host, swapped
-                # requests restored into a slot
-                "preemptions": 0, "restores": 0}
 
     def _drain_pool_events(self) -> None:
         """Fold the pool's spill/evict event counters into this run's
@@ -843,8 +873,9 @@ class Scheduler:
         if not self.prefix_cache or "patches" in r.extras:
             return _AdmitPlan(total)
         prompt = np.asarray(r.prompt, np.int32).ravel()
-        shared, matched = self._pages.match(prompt)
-        host_keys = self._pages.host_match(prompt, len(shared))
+        with self.tracer.span("prefix_match", rid=r.rid):
+            shared, matched = self._pages.match(prompt)
+            host_keys = self._pages.host_match(prompt, len(shared))
         ps = self.engine.page_size
         cap = len(shared) + len(host_keys)
         if max_run is not None:
@@ -930,9 +961,10 @@ class Scheduler:
         if restored:
             # the host-tier hit: spilled KV returns by one host-to-device
             # scatter — the prefill those pages held is skipped again
-            self.state = self.engine.restore_pages(
-                self.state, [p for p, _ in restored],
-                [ent["kv"] for _, ent in restored])
+            with self.tracer.span("restore_pages", pages=len(restored)):
+                self.state = self.engine.restore_pages(
+                    self.state, [p for p, _ in restored],
+                    [ent["kv"] for _, ent in restored])
             self.stats["host_hits"] += 1
             self.stats["host_restored_pages"] += len(restored)
             self.stats["host_hit_tokens"] += \
@@ -942,6 +974,7 @@ class Scheduler:
                 self.state, [s for s, _ in cow_pairs],
                 [d for _, d in cow_pairs])
             self.stats["cow_pages"] += len(cow_pairs)
+            self.tracer.instant("cow", pages=len(cow_pairs))
         self.stats["prefix_lookups"] += 1
         if plan.shared or plan.host_keys:
             self.stats["prefix_hits"] += 1
@@ -967,6 +1000,7 @@ class Scheduler:
             self._sampled_slots.add(slot)
 
     def _defer(self, r: Request) -> None:
+        self.tracer.instant("defer", rid=r.rid)
         self.stats["deferred_admissions"] += 1
         n = self._defer_counts.get(r.rid, 0) + 1
         self._defer_counts[r.rid] = n
@@ -975,7 +1009,36 @@ class Scheduler:
 
     def _note_first(self, r: Request) -> None:
         if r.rid not in self.ttft:
-            self.ttft[r.rid] = time.perf_counter() - self._run_t0
+            # ONE clock read feeds both the legacy ttft value and the
+            # prefill->decode span boundary, so span-derived TTFT equals
+            # this dict to float precision (acceptance bound: 1 ms)
+            now = time.perf_counter()
+            self.ttft[r.rid] = now - self._run_t0
+            self._req_phase(r.rid, "decode", at=now)
+
+    # -- per-request lifecycle spans ----------------------------------------
+    def _req_phase(self, rid: int, name: str,
+                   at: Optional[float] = None) -> None:
+        """Close ``rid``'s current lifecycle span (if any) and open
+        ``name`` back-to-back at the same timestamp, on the request's own
+        ``rid<N>`` trace track — so each track is a gapless sequence of
+        queued/prefill/decode/preempted spans."""
+        if at is None:
+            at = time.perf_counter()
+        h = self._rid_open.pop(rid, None)
+        if h is not None:
+            self.tracer.end(h, at=at)
+        self._rid_open[rid] = self.tracer.begin(name, tid=f"rid{rid}",
+                                                at=at, rid=rid)
+
+    def _req_end(self, r: Request) -> None:
+        """Close ``r``'s lifecycle track with a ``finish`` instant."""
+        now = time.perf_counter()
+        h = self._rid_open.pop(r.rid, None)
+        if h is not None:
+            self.tracer.end(h, at=now)
+        self.tracer.instant("finish", tid=f"rid{r.rid}", at=now, rid=r.rid,
+                            tokens=len(r.generated))
 
     def _next_seq(self) -> int:
         self._seq += 1
@@ -992,14 +1055,16 @@ class Scheduler:
         slot = max(active, key=lambda s: self._admit_seq.get(s, 0))
         r = active.pop(slot)
         pages = self._pages.table(slot)
-        blob = self.engine.swap_out(self.state, slot, pages)
-        self._pages.free(slot)
-        self.state = self.engine.release_pages(self.state, slot)
+        with self.tracer.span("swap_out", rid=r.rid, pages=len(pages)):
+            blob = self.engine.swap_out(self.state, slot, pages)
+            self._pages.free(slot)
+            self.state = self.engine.release_pages(self.state, slot)
         free.append(slot)
         if self.drafter is not None:
             self.drafter.release(slot)
         swapped.append(_Swapped(r, blob, len(pages)))
         self.stats["preemptions"] += 1
+        self._req_phase(r.rid, "preempted")
 
     def _evict(self, slot: int, free: deque) -> None:
         free.append(slot)
@@ -1025,9 +1090,12 @@ class Scheduler:
         for k, v in r.extras.items():
             inputs[k] = np.asarray(v)[None]
         t0 = time.perf_counter()
+        h = self.tracer.begin("prefill_insert", at=t0, rid=r.rid)
         self.state, tok = self.engine.insert(self.state, inputs, slot)
         first = int(np.asarray(tok)[0])     # sync point ends the timing
-        self.stats["prefill_s"] += time.perf_counter() - t0
+        now = time.perf_counter()
+        self.tracer.end(h, at=now)
+        self.stats["prefill_s"] += now - t0
         self.stats["prefill_tokens"] += sum(
             int(np.shape(v)[1]) for v in inputs.values())
         r.generated.append(first)
@@ -1052,10 +1120,14 @@ class Scheduler:
         c = min(c, remaining)
         toks = prompt[None, adm.cursor:adm.cursor + c]
         t0 = time.perf_counter()
+        h = self.tracer.begin("prefill_chunk", at=t0, rid=r.rid,
+                              cursor=adm.cursor, tokens=int(c))
         self.state, tok = self.engine.insert_chunk(
             self.state, {"tokens": toks}, adm.slot, adm.cursor)
         first = int(np.asarray(tok)[0])     # sync point ends the timing
-        self.stats["prefill_s"] += time.perf_counter() - t0
+        now = time.perf_counter()
+        self.tracer.end(h, at=now)
+        self.stats["prefill_s"] += now - t0
         self.stats["prefill_tokens"] += c
         self.stats["prefill_chunks"] += 1
         adm.cursor += c
@@ -1101,7 +1173,10 @@ class Scheduler:
                 wants[slot] = (np.concatenate(
                     [np.asarray(r.prompt, np.int32),
                      np.asarray(r.generated, np.int32)]), k_s)
-        proposals = self.drafter.propose(wants) if wants else {}
+        proposals = {}
+        if wants:
+            with self.tracer.span("spec_propose", slots=len(wants)):
+                proposals = self.drafter.propose(wants)
         for slot, d in proposals.items():
             d = np.asarray(d, np.int32).ravel()[:wants[slot][1]]
             drafts[slot, :len(d)] = d
@@ -1110,9 +1185,10 @@ class Scheduler:
         if not dlen.any():
             self.state, toks = self.engine.decode(self.state, active=mask)
             return np.asarray(toks)[:, None], mask.astype(np.int32)
-        self.state, emitted, consumed = self.engine.verify(
-            self.state, drafts, dlen, mask)
-        emitted, consumed = np.asarray(emitted), np.asarray(consumed)
+        with self.tracer.span("spec_verify", drafted=int(dlen.sum())):
+            self.state, emitted, consumed = self.engine.verify(
+                self.state, drafts, dlen, mask)
+            emitted, consumed = np.asarray(emitted), np.asarray(consumed)
         self.stats["spec_steps"] += 1
         self.stats["spec_accepted"] += int(consumed[mask].sum() - mask.sum())
         return emitted, consumed
@@ -1123,17 +1199,25 @@ class Scheduler:
 
         ``stats`` describes this run alone (reset here); totals across
         runs accumulate in ``lifetime_stats``."""
-        self.stats = self._fresh_stats()
+        self.stats.reset()
+        self.decode_gaps.reset()
         self._last_decode_t = None
-        self.ttft = {}
+        self.ttft.clear()
         self._run_t0 = time.perf_counter()
         self._defer_counts = {}
         self._admit_seq = {}
         self._seq = 0
         self.admission_order = []
+        self._rid_open = {}
+        h_run = self.tracer.begin("run", at=self._run_t0,
+                                  requests=len(requests))
         try:
             return self._run(requests)
         finally:
+            for h in self._rid_open.values():   # aborted-run lifecycles
+                self.tracer.end(h)
+            self._rid_open.clear()
+            self.tracer.end(h_run)
             self._drain_pool_events()
             self._fold_lifetime()
 
@@ -1143,6 +1227,10 @@ class Scheduler:
             # unservable request deep in the queue must not discard the
             # tokens already generated for the requests ahead of it
             self._validate(r)
+        for r in requests:
+            # every request's lifecycle track starts queued at run start
+            # (the arrival model run() exposes — a whole queue at once)
+            self._req_phase(r.rid, "queued", at=self._run_t0)
         pending = deque(requests)
         active: Dict[int, Request] = {}
         admissions: deque[_Admission] = deque()
@@ -1150,6 +1238,10 @@ class Scheduler:
         free = deque(range(self.engine.slots))
         chunk = self.engine.prefill_chunk if self.engine.paged else 0
         while pending or active or admissions or swapped:
+            # one "iter" span per loop pass: with the nested phase spans it
+            # accounts for effectively all wall-clock between the first
+            # admission and the last finish (the >= 95% coverage gate)
+            h_it = self.tracer.begin("iter")
             progressed = False
             # restore preempted requests first (their pages and slot were
             # taken to absorb a burst — they are owed the next headroom);
@@ -1164,9 +1256,12 @@ class Scheduler:
                     break
                 swapped.popleft()
                 slot = free.popleft()
-                pages = self._pages.alloc(slot, sw.n_pages)
-                self.state = self.engine.swap_in(self.state, slot, pages,
-                                                 sw.blob)
+                with self.tracer.span("swap_in", rid=sw.r.rid,
+                                      pages=sw.n_pages):
+                    pages = self._pages.alloc(slot, sw.n_pages)
+                    self.state = self.engine.swap_in(self.state, slot,
+                                                     pages, sw.blob)
+                self._req_phase(sw.r.rid, "decode")
                 if sw.r.sampling.greedy:
                     self._sampled_slots.discard(slot)
                 else:
@@ -1189,6 +1284,7 @@ class Scheduler:
             # the most recently admitted active slot)
             while pending and free:
                 r = pending[0]
+                h_adm = self.tracer.begin("admit", rid=r.rid)
                 plan = self._plan(r) if self.engine.paged else None
                 if self.engine.paged and not self._fits(plan, reserve):
                     while self.preempt and active and \
@@ -1210,11 +1306,13 @@ class Scheduler:
                         plan = self._plan(r, max_run=len(plan.shared) +
                                           len(plan.host_keys) - 1)
                     if not self._fits(plan, reserve):
+                        self.tracer.end(h_adm, deferred=True)
                         self._defer(r)
                         break
                 pending.popleft()
                 slot = free.popleft()
                 self._admit_seq[slot] = self._next_seq()
+                self._req_phase(r.rid, "prefill")
                 if self.engine.paged:
                     self._claim_pages(r, slot, plan)
                 self._set_sampling(r, slot)
@@ -1236,9 +1334,11 @@ class Scheduler:
                         self._pages.register(
                             slot, np.asarray(r.prompt, np.int32))
                     if self._done(r):       # EOS straight out of prefill
+                        self._req_end(r)
                         self._evict(slot, free)
                     else:
                         active[slot] = r
+                self.tracer.end(h_adm, slot=slot)
             # one prefill chunk of the admission at the head of the queue,
             # then fall through to the all-slot decode: long-prompt
             # admission interleaves with in-flight decodes
@@ -1248,6 +1348,7 @@ class Scheduler:
                 if self._prefill_one_chunk(adm):
                     admissions.popleft()
                     if self._done(adm.r):
+                        self._req_end(adm.r)
                         self._evict(adm.slot, free)
                     else:
                         active[adm.slot] = adm.r
@@ -1258,6 +1359,8 @@ class Scheduler:
                     mask = np.zeros((self.engine.slots,), bool)
                     mask[list(active)] = True
                 t0 = time.perf_counter()
+                h_dec = self.tracer.begin("decode_step", at=t0,
+                                          slots=len(active))
                 if self.spec_k:
                     emitted, consumed = self._spec_round(active, mask)
                 else:
@@ -1266,13 +1369,15 @@ class Scheduler:
                     emitted = np.asarray(toks)[:, None]
                     consumed = np.ones((self.engine.slots,), np.int32)
                 now = time.perf_counter()   # emitted is host -> synced
+                self.tracer.end(h_dec, at=now)
                 self.stats["decode_s"] += now - t0
                 self.stats["decode_steps"] += 1
                 self.stats["decode_slot_steps"] += len(active)
                 if self._last_decode_t is not None:
+                    gap = now - self._last_decode_t
                     self.stats["max_decode_gap_s"] = max(
-                        self.stats["max_decode_gap_s"],
-                        now - self._last_decode_t)
+                        self.stats["max_decode_gap_s"], gap)
+                    self.decode_gaps.record(gap)
                 self._last_decode_t = now
                 for slot, r in list(active.items()):
                     # a spec round can emit several tokens; honor EOS as
@@ -1285,9 +1390,11 @@ class Scheduler:
                             break
                     if self._done(r):
                         del active[slot]
+                        self._req_end(r)
                         self._evict(slot, free)
                 if not active:
                     self._last_decode_t = None
+            self.tracer.end(h_it)
             if not progressed:
                 # nothing in flight can ever free the pages the head
                 # request needs — admission would spin forever

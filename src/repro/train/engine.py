@@ -30,6 +30,7 @@ from jax.sharding import NamedSharding
 
 from repro import checkpoint as ckpt
 from repro.configs.base import ModelConfig, TrainConfig
+from repro.obs import profiler
 from repro.distributed.sharding import (
     logical_sharding, make_rules, resolve_pspec, tree_shardings,
 )
@@ -322,10 +323,12 @@ class Engine:
                     f"minibatch dim {mb} not divisible by "
                     f"accum_steps={self.accum}")
         jfn = self._get_jit(state, batch)
-        if not self._explicit:
-            return jfn(state, batch)
-        with self.mesh, logical_sharding(self.mesh, self.rules):
-            return jfn(state, batch)
+        # live only inside an open jax.profiler window (--profile-dir)
+        with profiler.annotate("train.step"):
+            if not self._explicit:
+                return jfn(state, batch)
+            with self.mesh, logical_sharding(self.mesh, self.rules):
+                return jfn(state, batch)
 
     # -- periodic evaluation on the sharded state --------------------------
     def _eval_body(self, state: TrainState, batch: Dict[str, jax.Array]):
@@ -350,7 +353,8 @@ class Engine:
             else:
                 jfn = jax.jit(self._eval_body)
             self._jit_cache[key] = jfn
-        if not self._explicit:
-            return jfn(state, batch)
-        with self.mesh, logical_sharding(self.mesh, self.rules):
-            return jfn(state, batch)
+        with profiler.annotate("train.eval_step"):
+            if not self._explicit:
+                return jfn(state, batch)
+            with self.mesh, logical_sharding(self.mesh, self.rules):
+                return jfn(state, batch)
